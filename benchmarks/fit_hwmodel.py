@@ -1,0 +1,78 @@
+"""Calibration of the P&R amplification factors in repro.core.hwmodel.
+
+Solves, per microarchitecture, the PNR_AREA/PNR_POWER factor that makes
+the model's EN-T(ours) improvement at the 1 TOPS reference scale hit the
+target derived from the paper (Fig 7 averages and its single per-arch
+disclosure: 1D/2D = 20.2%/20.5%; per-arch split chosen so the five-arch
+averages reproduce 12.2%/17.5% and the SoC bands order correctly).
+
+Run once, paste the printed tables into hwmodel.py, and keep this script
+as the provenance record.  ``python -m benchmarks.fit_hwmodel``
+"""
+
+from __future__ import annotations
+
+from repro.core import hwmodel as hw
+
+# Per-arch targets at 1 TOPS for the ent_ours variant (fractions).
+TARGET_AREA = {
+    "2d_matrix": 0.140,
+    "1d2d_array": 0.202,   # paper, explicit
+    "systolic_os": 0.100,
+    "systolic_ws": 0.095,
+    "cube_3d": 0.072,
+}
+TARGET_ENERGY = {
+    "2d_matrix": 0.235,
+    "1d2d_array": 0.205,   # paper, explicit
+    "systolic_os": 0.175,
+    "systolic_ws": 0.165,
+    "cube_3d": 0.082,
+}
+
+
+def solve(arch: str, metric: str, target: float) -> float:
+    """Closed form: improvement t = base/(base - delta*P) - 1 =>
+    P = base*t / ((1+t) * delta), with delta the raw EN-T saving."""
+    table = hw.PNR_AREA if metric == "area_eff" else hw.PNR_POWER
+    which = 0 if metric == "area_eff" else 1
+    size = 8 if arch == "cube_3d" else 32
+    base = sum(hw.raw_breakdown(hw.TCUConfig(arch, size, "baseline"))[which].values())
+    ent = sum(hw.raw_breakdown(hw.TCUConfig(arch, size, "ent_ours"))[which].values())
+    delta = base - ent
+    if delta <= 0:
+        raise SystemExit(f"{arch}/{metric}: raw delta non-positive ({delta:.1f}); "
+                         "reduce wiring coefficients")
+    p = base * target / ((1 + target) * delta)
+    table[arch] = p
+    return p
+
+
+def main() -> None:
+    print("PNR_AREA = {")
+    for arch in hw.ARCHS:
+        v = solve(arch, "area_eff", TARGET_AREA[arch])
+        print(f'    "{arch}": {v:.2f},')
+    print("}")
+    print("PNR_POWER = {")
+    for arch in hw.ARCHS:
+        v = solve(arch, "energy_eff", TARGET_ENERGY[arch])
+        print(f'    "{arch}": {v:.2f},')
+    print("}")
+    print("\nresulting scale averages (paper: area 8.7/12.2/11.0, energy 13.0/17.5/15.5):")
+    for scale in ("256GOPS", "1TOPS", "4TOPS"):
+        avg = hw.scale_average(scale)
+        print(f"  {scale:8s} area +{avg['area_eff']*100:5.1f}%  energy +{avg['energy_eff']*100:5.1f}%")
+    print("\nper-arch @1TOPS (ours | mbe):")
+    for arch in hw.ARCHS:
+        size = 8 if arch == "cube_3d" else 32
+        ours = hw.improvement(arch, size)
+        mbe = hw.improvement(arch, size, "ent_mbe")
+        print(
+            f"  {arch:12s} ours area +{ours['area_eff']*100:5.1f}% energy +{ours['energy_eff']*100:5.1f}%"
+            f" | mbe area {mbe['area_eff']*100:+5.1f}% energy {mbe['energy_eff']*100:+5.1f}%"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""§Perf hillclimbing driver: hypothesis -> change -> measure -> record.
+
+Runs named experiment variants on the three selected cells and writes
+experiments/perf/<cell>__<variant>.json.  Each variant is a config-level
+change (sharding profile, microbatch count, collective dtype, remat,
+quantization) applied to the same lower+compile+roofline pipeline as the
+baseline, so before/after numbers are directly comparable.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell mamba2 [--variant X]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+from dataclasses import replace
+
+from repro.configs.base import TrainConfig
+
+# (cell key) -> arch, shape, {variant: run_cell kwargs}
+def _T(**kw):
+    kw.setdefault("remat", "full")
+    return TrainConfig(seq_len=4096, global_batch=256, **kw)
+
+EXPERIMENTS = {
+    "mamba2": ("mamba2-370m", "train_4k", {
+        # H1: 370M params over 256 chips: TP(16) moves more activation
+        # bytes than it saves compute -> pure FSDP (batch over all 256)
+        "baseline": {},
+        "fsdp": {"profile": "fsdp"},
+        # H2: at batch 1/device the activations are tiny; remat only adds
+        # recompute HBM traffic -> turn it off
+        "fsdp_noremat": {"profile": "fsdp",
+                         "tcfg": _T(microbatch=64, remat="none")},
+        # H3: with no remat the model fits without microbatching either
+        "fsdp_noremat_nomicro": {"profile": "fsdp",
+                                 "tcfg": _T(microbatch=0, remat="none")},
+        # H4: no-remat blows HBM (54 GB); remat + single batch keeps the
+        # 4x memory win while fitting
+        "fsdp_nomicro": {"profile": "fsdp", "tcfg": _T(microbatch=0)},
+    }),
+    "minicpm": ("minicpm-2b", "decode_32k", {
+        # H1: decode re-gathers FSDP-sharded weights EVERY token; serving
+        # weights should be stationary (TP-only, replicated over data)
+        "baseline": {},
+        "serve_tp": {"profile": "serve_tp"},
+        # H2: w8a8 int8 weights halve the weight-read bytes (and are what
+        # the EN-T TCU actually consumes)
+        "serve_tp_w8a8": {"profile": "serve_tp", "quantized": True},
+        # H3 (code change, models/transformer.py): cache rides the scan
+        # carry with slice updates instead of xs/ys staging -> the 2x
+        # full-cache copy per token disappears
+        "serve_tp_carrycache": {"profile": "serve_tp"},
+        "serve_tp_carrycache_w8a8": {"profile": "serve_tp", "quantized": True},
+        # H4: int8 KV cache with per-(slot,head) scales folded exactly
+        # into the attention dots -> the dominant decode HBM term halves
+        "serve_tp_kv8": {"profile": "serve_tp", "quantized": True,
+                         "kv_quant": True},
+    }),
+    "jamba": ("jamba-1.5-large", "train_4k", {
+        # 398B hybrid MoE: collective-dominated
+        "baseline": {},
+        # H1: the MoE combine psum moves f32; bf16 halves it
+        "bf16_combine": {"cfg_transform": "bf16_combine"},
+        # H2: wgrads leave the backward replicated (all-reduce) before the
+        # accumulator pin; pinning each microbatch grad turns them into
+        # reduce-scatters into the FSDP shard
+        "grad_prepin": {"tcfg": _T(microbatch=32, grad_prepin=True)},
+        # H3: FSDP weight gathers scale with microbatch count; 8 -> 4
+        # halves them (memory allows after H1)
+        "micro4": {"tcfg": _T(microbatch=64)},
+        # H4: grads reduced in bf16 (AR bytes halve); f32 master weights
+        "bf16_grads": {"tcfg": _T(microbatch=32, grad_dtype="bfloat16")},
+        # combined best (prepin refuted -> dropped)
+        "combined": {"cfg_transform": "bf16_combine",
+                     "tcfg": _T(microbatch=64, grad_dtype="bfloat16")},
+    }),
+}
+
+
+def _transform(name):
+    if name is None:
+        return None
+    if name == "bf16_combine":
+        def f(cfg):
+            return replace(cfg, moe=replace(cfg.moe, combine_dtype="bfloat16"))
+        return f
+    raise KeyError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=tuple(EXPERIMENTS), required=True)
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+    arch, shape, variants = EXPERIMENTS[args.cell]
+    os.makedirs(args.out, exist_ok=True)
+    todo = [args.variant] if args.variant else list(variants)
+    for name in todo:
+        kw = dict(variants[name])
+        if "cfg_transform" in kw:
+            kw["cfg_transform"] = _transform(kw["cfg_transform"])
+        print(f"=== {args.cell} :: {name}")
+        rec = run_cell(arch, shape, **kw)
+        rec["variant"] = name
+        with open(os.path.join(args.out, f"{args.cell}__{name}.json"), "w") as f:
+            json.dump(rec, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Assemble the roofline/dry-run tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir experiments/dryrun]
+
+Produces the §Dry-run and §Roofline markdown used by EXPERIMENTS.md and
+identifies the three hillclimb cells (worst roofline fraction, most
+collective-bound, most representative of the paper's technique).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | status | compile_s | peak/dev GB (cpu) | peak/dev GB (tpu-adj) | flops/dev | coll B/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['status']} ({r.get('reason','')[:40]}...) | | | | | |")
+            continue
+        m = r["memory"]
+        # clamp the dtype adjustment to the live args+outputs floor
+        adj = max(m.get("peak_tpu_adjusted_gb", m["peak_per_device_gb"]),
+                  m["argument_gb"] + m["output_gb"] - m["alias_gb"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']} | {m['peak_per_device_gb']:.2f} | "
+            f"{adj:.2f} | "
+            f"{r['roofline']['flops_per_dev']:.2e} | "
+            f"{r['roofline']['coll_bytes_per_dev']:.2e} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | compute ms | memory ms | collective ms | bottleneck | MODEL_FLOPS/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    singles = [r for r in recs if r["status"] == "ok" and r["mesh"] == "single_pod"]
+    for r in sorted(singles, key=lambda r: (r["arch"], r["shape"])):
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(ro['compute_s'])} | "
+            f"{fmt_ms(ro['memory_s'])} | {fmt_ms(ro['collective_s'])} | "
+            f"**{ro['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{ro['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(recs):
+    """Three DISTINCT cells: worst roofline fraction among full-sequence
+    cells, most collective-bound train cell, and the EN-T-representative
+    serving cell (biggest dense decode — int8 serving TCUs are where the
+    paper's technique lives)."""
+    singles = [r for r in recs if r["status"] == "ok" and r["mesh"] == "single_pod"]
+    fullseq = [r for r in singles if r["kind"] in ("train", "prefill")]
+    worst = min(fullseq, key=lambda r: r["roofline"]["roofline_fraction"])
+    trains = [r for r in singles if r["kind"] == "train" and r is not worst]
+    coll = max(trains, key=lambda r: (r["roofline"]["collective_s"]
+                                      / max(r["roofline"]["compute_s"], 1e-12)))
+    decodes = [r for r in singles if r["kind"] == "decode"]
+    rep = max(decodes, key=lambda r: r["roofline"]["flops_per_dev"])
+    return worst, coll, rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    ok = [r for r in recs if r["status"] == "ok"]
+    print(f"## Dry-run: {len(ok)} compiled cells "
+          f"({len([r for r in recs if r['status']=='skipped'])} skipped by design)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod, per device)\n")
+    print(roofline_table(recs))
+    worst, coll, rep = pick_hillclimb(recs)
+    print("\n## Hillclimb selection")
+    print(f"- worst roofline fraction: {worst['arch']} x {worst['shape']} "
+          f"({worst['roofline']['roofline_fraction']:.3f})")
+    print(f"- most collective-bound:   {coll['arch']} x {coll['shape']} "
+          f"(coll/compute = {coll['roofline']['collective_s']/max(coll['roofline']['compute_s'],1e-12):.1f}x)")
+    print(f"- EN-T representative:     {rep['arch']} x {rep['shape']} "
+          f"(busiest w8a8 decode cell)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Full paper-reproduction report: every table/figure, model vs paper.
+
+    PYTHONPATH=src python examples/hw_efficiency_report.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.paper_tables import ALL_TABLES
+
+
+def md_table(rows):
+    keys = list(rows[0])
+    out = ["| " + " | ".join(keys) + " |",
+           "|" + "---|" * len(keys)]
+    for r in rows:
+        out.append("| " + " | ".join(str(r[k]) for k in keys) + " |")
+    return "\n".join(out)
+
+
+for fn in ALL_TABLES:
+    rows, ref = fn()
+    print(f"\n### {ref}\n")
+    print(md_table(rows))

@@ -1,0 +1,84 @@
+"""End-to-end training driver: reduced MiniCPM with its WSD schedule,
+checkpointing, and a simulated mid-run restart.
+
+    PYTHONPATH=src python examples/train_minicpm.py [--steps 200]
+
+This is the e2e train example mandated by the deliverables (a ~100M-class
+model for a few hundred steps, CPU-sized here; launch/train.py runs the
+full configs on real meshes).
+"""
+
+import argparse
+import shutil
+import tempfile
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config, get_optim, reduced_config
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import Prefetcher, SyntheticSource, TokenStream
+from repro.models.transformer import build_model
+from repro.runtime.train_loop import init_opt_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config("minicpm-2b"))
+    # widen a bit so there is something to learn (~1M params)
+    cfg = replace(cfg, d_model=128, num_heads=4, num_kv_heads=4, d_ff=512,
+                  num_layers=4, head_dim=32)
+    ocfg = replace(get_optim("minicpm-2b"), lr=3e-3, warmup_steps=20,
+                   total_steps=args.steps)
+    print(f"model={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"schedule={ocfg.schedule} (MiniCPM WSD)")
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(seq_len=args.seq, global_batch=args.batch,
+                       checkpoint_every=50)
+    step = jax.jit(make_train_step(model, ocfg, tcfg))
+    opt = init_opt_state(tcfg, params)
+
+    ckdir = tempfile.mkdtemp(prefix="repro_minicpm_")
+    ck = Checkpointer(ckdir)
+    stream = TokenStream(SyntheticSource(cfg.vocab_size, seed=42),
+                         global_batch=args.batch, seq_len=args.seq)
+    pf = Prefetcher(stream, depth=2)
+
+    crash_at = args.steps // 2
+    s = 0
+    while s < args.steps:
+        batch = {k: jnp.asarray(v) for k, v in pf.next().items()}
+        params, opt, m = step(params, opt, batch)
+        s += 1
+        if s % 20 == 0:
+            print(f"step {s:4d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  gnorm {float(m['grad_norm']):.2f}")
+        if s % tcfg.checkpoint_every == 0:
+            ck.save(s, {"params": params, "opt": opt})
+        if s == crash_at:
+            print(f"--- simulating failure at step {s}: restoring latest "
+                  "checkpoint and resuming ---")
+            ck.wait()
+            rs, state = ck.restore_latest({"params": params, "opt": opt})
+            params, opt = state["params"], state["opt"]
+            stream.seek(rs)
+            pf.close()
+            pf = Prefetcher(stream, depth=2)
+            s = rs
+    ck.wait()
+    pf.close()
+    print(f"done; checkpoints in {ckdir}")
+    shutil.rmtree(ckdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

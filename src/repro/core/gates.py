@@ -1,0 +1,87 @@
+"""Calibrated SMIC 40nm cost constants (paper Tables 1-2, §4.1-4.2).
+
+Every constant either comes directly from the paper or is calibrated so
+the structural model in :mod:`repro.core.hwmodel` reproduces the paper's
+reported ratios; provenance is noted per constant.  Units: area um^2,
+power uW @ 500 MHz typical corner (as in the paper), delay ns.
+"""
+
+from __future__ import annotations
+
+# --- Encoders (Table 1 upper/mid) ------------------------------------------
+# Group rows are exactly N_encoders x single-encoder cost (verified:
+# 8-bit MBE 28.22 ~= 4 x 7.06; 8-bit ours 25.93 ~= 3 x 8.64), so the
+# per-encoder constants are directly given.
+MBE_ENCODER_AREA = 7.06          # Table 1 "Single Encoder Comparison"
+ENT_ENCODER_AREA = 8.64          # ditto (ours: +1 XNOR, -1 AND)
+MBE_ENCODER_POWER = 24.06 / 4    # 8-bit group power / 4 encoders = 6.015
+ENT_ENCODER_POWER = 21.47 / 3    # = 7.157 (32-bit row gives 7.01; <2% spread)
+MBE_ENCODER_DELAY = 0.23         # parallel -> width-independent (Table 1)
+ENT_ENCODER_DELAY_PER_STAGE = 0.09  # carry chain: 0.36@3enc .. 1.41@15enc fit
+
+
+def ent_encoder_delay(num_encoders: int) -> float:
+    """Carry-chain delay model: linear in chain length (Table 1 column)."""
+    return ENT_ENCODER_DELAY_PER_STAGE * (num_encoders + 1)
+
+
+# --- INT8 multipliers (Table 1 lower) ---------------------------------------
+MULT_AREA = {
+    "dw_ip": 291.6,      # Synopsys DesignWare baseline PE multiplier
+    "mbe": 292.7,        # Modified Booth multiplier (encoders inside)
+    "ours": 290.4,       # EN-T multiplier, encoder inside
+    "rme_ours": 264.4,   # EN-T multiplier, encoder REMOVED (in-array PE)
+}
+MULT_POWER = {"dw_ip": 211.4, "mbe": 212.2, "ours": 210.3, "rme_ours": 188.9}
+MULT_DELAY = {"dw_ip": 1.87, "mbe": 1.86, "ours": 1.99, "rme_ours": 1.63}
+
+# MBE multiplier with its 4 encoders hoisted out (not measured standalone in
+# the paper; derived = mbe - 4x single-encoder cost, consistent with how
+# rme_ours = ours - 3x encoder checks out: 290.4-264.4 = 26.0 ~= 3x8.64).
+MBE_MULT_RME_AREA = MULT_AREA["mbe"] - 4 * MBE_ENCODER_AREA      # 264.46
+MBE_MULT_RME_POWER = MULT_POWER["mbe"] - 4 * MBE_ENCODER_POWER   # 188.14
+
+# --- Registers / adders ------------------------------------------------------
+# Paper §4.3: "additional power consumption for transferring 4-bit registers
+# is approximately 15.13 uW" -> 3.78 uW/bit.
+REG_BIT_POWER = 15.13 / 4
+REG_BIT_AREA = 6.6               # SMIC40 DFF ~ typical; calibrated (Fig 6)
+FA_BIT_AREA = 6.2                # full-adder cell (accumulators/adder trees)
+FA_BIT_POWER = 2.9
+
+# --- Wiring / layout model ---------------------------------------------------
+# The paper attributes part of the EN-T win to the physically smaller PE:
+# shorter PE-to-PE paths -> lower data-movement power, more compact layout.
+# We model per-PE interconnect as (bus_bits x PE pitch) with per-topology
+# coefficients fit to Fig 6/7 (see hwmodel.fit_report()); pitch = sqrt(PE
+# cell area).  area: um^2 per (bit x um); power: uW per (bit x um).
+WIRE_AREA_COEFF = {      # broadcast fabrics route long lines -> higher k
+    "2d_matrix": 0.30,
+    "1d2d_array": 0.30,
+    "systolic_os": 0.15,
+    "systolic_ws": 0.15,
+    "cube_3d": 0.22,
+}
+WIRE_POWER_COEFF = {
+    "2d_matrix": 0.15,
+    "1d2d_array": 0.15,
+    "systolic_os": 0.075,
+    "systolic_ws": 0.075,
+    "cube_3d": 0.11,
+}
+# Congestion exponent: wiring grows superlinearly with array span.  The
+# scale hump in Fig 7 (256G -> 1T rises, 1T -> 4T falls) emerges from
+# edge-encoder amortization + P&R ramp (up) vs the wider encoded A-bus
+# wiring growing with congestion (down).
+WIRE_CONGESTION_EXP = 0.9
+
+# Structural integration saving for the multiplier-adder-tree fabric
+# ("1D/2D Array"): the paper reports its EN-T gain is the largest (20.2% /
+# 20.5% @ 1 TOPS) "due to the specific characteristics of the
+# multiplier-adder architecture itself (with no PEs, multipliers and
+# multiplicands are not pipelined to the adder tree)" — the custom EN-T
+# multiplier feeds the tree in carry-save form, dropping the per-PE final
+# CPA stage that the closed DW IP baseline must keep.  Calibrated to the
+# paper's reported 1D/2D numbers.
+TREE_FUSION_AREA_SAVE = 42.0     # um^2/PE (16-bit CPA stage)
+TREE_FUSION_POWER_SAVE = 22.0    # uW/PE

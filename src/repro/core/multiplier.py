@@ -1,0 +1,144 @@
+"""Bit-exact multiplier models built from the paper's encodings (§3.1).
+
+A hardware multiplier is encode -> partial products -> compress -> add.
+These models reproduce that pipeline arithmetically so we can (a) prove
+the EN-T encoding computes exact products, and (b) count partial-product
+rows / encoded wire widths for the silicon cost model.
+
+Also provides the *digit-plane* decomposition used by the EN-T Pallas
+kernel: an int8 weight matrix is pre-encoded once (the paper's hoisted
+encoder at the array edge) into signed digit planes p_i in {-2,...,2}
+such that  W = sum_i p_i 4^i  — after which any matmul X @ W equals
+sum_i (X @ p_i) << 2i, all shift/adds, bit-exact in int32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding as enc
+
+__all__ = [
+    "mbe_partial_products",
+    "ent_partial_products",
+    "mbe_multiply",
+    "ent_multiply",
+    "ent_digit_planes",
+    "planes_to_weight",
+    "ent_plane_matmul",
+    "NUM_INT8_PLANES",
+]
+
+# int8 magnitude <= 128 < 192 => EN-T carry-out is always 0 (see encoding.py),
+# so an int8 weight needs exactly 4 signed digit planes.
+NUM_INT8_PLANES = 4
+
+
+def mbe_partial_products(a, b, n_bits: int):
+    """Partial-product rows of a*b via MBE: rows[i] = m_i * b * 4^i.
+
+    Returns int32 [..., N]; sum over the last axis == a * b exactly.
+    Each row is a shift/negate of b (m_i in {-2,...,2}), which is what the
+    Booth selector mux produces in hardware.
+    """
+    m = enc.mbe_encode(a, n_bits)
+    b = jnp.asarray(b, jnp.int32)[..., None]
+    n = m.shape[-1]
+    weights = jnp.asarray([4**i for i in range(n)], jnp.int32)
+    return m.astype(jnp.int32) * b * weights
+
+
+def ent_partial_products(a, b, n_bits: int):
+    """Partial-product rows of a*b via the EN-T encoding.
+
+    Encodes |a| into digits w_i plus carry, applies the sign of a to b
+    (the hardware -B mux of §3.3.1).  Returns int32 [..., N+1] rows
+    (last row is the carry row, identically 0 for int8); sum == a * b.
+    """
+    sign, w, carry = enc.ent_encode_signed(a, n_bits)
+    bsel = jnp.where(sign == 1, -jnp.asarray(b, jnp.int32), jnp.asarray(b, jnp.int32))
+    bsel = bsel[..., None]
+    n = w.shape[-1]
+    weights = jnp.asarray([4**i for i in range(n)], jnp.int32)
+    rows = w.astype(jnp.int32) * bsel * weights
+    carry_row = carry.astype(jnp.int32)[..., None] * bsel * (4**n)
+    return jnp.concatenate([rows, carry_row], axis=-1)
+
+
+def mbe_multiply(a, b, n_bits: int):
+    """a*b via MBE partial products (bit-exact)."""
+    return jnp.sum(mbe_partial_products(a, b, n_bits), axis=-1).astype(jnp.int32)
+
+
+def ent_multiply(a, b, n_bits: int):
+    """a*b via EN-T partial products (bit-exact)."""
+    return jnp.sum(ent_partial_products(a, b, n_bits), axis=-1).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# Digit planes: the "encode once at the edge, reuse across the array" form.
+# ----------------------------------------------------------------------------
+
+def ent_digit_planes(w_int8):
+    """Pre-encode an int8 weight array into 4 signed digit planes.
+
+    planes[i] = (-1)^sign(w) * w_i  with w_i the EN-T digits of |w|, so
+    planes[i] in {-2,-1,0,1,2} and  w == sum_i planes[i] * 4**i  exactly.
+
+    This is the software twin of the paper's edge encoder: it runs ONCE
+    per weight (at checkpoint-load / quantization time) and every
+    subsequent matmul consumes the encoded form — the computation reuse
+    EN-T exploits in silicon.
+
+    Returns int8 [4, *w.shape] (planes leading so each plane is a
+    contiguous matmul operand).
+    """
+    w_int8 = jnp.asarray(w_int8)
+    if w_int8.dtype != jnp.int8:
+        raise TypeError(f"expected int8 weights, got {w_int8.dtype}")
+    sign, w, carry = enc.ent_encode_signed(w_int8.astype(jnp.int32), 8)
+    # int8 magnitude <= 128 -> carry == 0 always; checked in tests.
+    signed = jnp.where(sign[..., None] == 1, -w, w)  # [..., 4]
+    return jnp.moveaxis(signed, -1, 0).astype(jnp.int8)
+
+
+def planes_to_weight(planes):
+    """Inverse of :func:`ent_digit_planes` (int32 result)."""
+    n = planes.shape[0]
+    weights = jnp.asarray([4**i for i in range(n)], jnp.int32).reshape(
+        (n,) + (1,) * (planes.ndim - 1)
+    )
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=0)
+
+
+def ent_plane_matmul(x_int8, planes):
+    """X @ W computed from pre-encoded digit planes, bit-exact in int32.
+
+    x_int8: [m, k] int8 activations; planes: [4, k, n] int8 digit planes.
+    Returns int32 [m, n] == x.astype(i32) @ planes_to_weight(planes).
+    Each plane matmul is int8 x {-2..2} -> the MXU-friendly form the EN-T
+    array computes; the 4^i combine is two shift-adds.
+    """
+    x = x_int8.astype(jnp.int32)
+    acc = None
+    for i in range(planes.shape[0]):
+        term = x @ planes[i].astype(jnp.int32)
+        term = term << (2 * i)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+# Pure-numpy oracle (independent of the jnp implementation) ------------------
+
+def np_ent_plane_matmul(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Oracle: decompose w with the numpy encoder, matmul in int64."""
+    sign = w < 0
+    mag = np.abs(w.astype(np.int64))
+    digits, carry = enc.np_ent_encode_unsigned(mag, 8)
+    assert np.all(carry == 0)
+    planes = np.where(sign[None, ...], -np.moveaxis(digits, -1, 0), np.moveaxis(digits, -1, 0))
+    out = np.zeros((x.shape[0], w.shape[1]), np.int64)
+    for i in range(4):
+        out += (x.astype(np.int64) @ planes[i]) << (2 * i)
+    return out

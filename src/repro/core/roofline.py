@@ -1,0 +1,225 @@
+"""Roofline-term derivation from compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_device   / peak_FLOPs      (197 TF/s bf16)
+    memory     = HLO_bytes_per_device   / HBM_bw          (819 GB/s)
+    collective = collective_bytes/dev   / ICI_link_bw     (~50 GB/s/link)
+
+``compiled.cost_analysis()`` reports the per-partition program (post
+SPMD), so its flops/bytes are already per-device — equivalent to the
+spec's global/(chips x peak) form.  Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO text and apply a per-op ring
+model (documented inline) using each instruction's result shape and its
+replica-group size.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(line: str) -> float:
+    """Bytes of the instruction's result (first shape(s) on the line,
+    including tuple results)."""
+    lhs = line.split(" = ", 1)
+    target = lhs[1] if len(lhs) == 2 else line
+    # shapes up to the opcode
+    for op in _COLLECTIVES:
+        idx = target.find(op)
+        if idx >= 0:
+            target = target[:idx]
+            break
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(target))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    return default
+
+
+def collective_bytes(hlo_text: str, num_devices: int) -> dict:
+    """Per-device bytes moved over the interconnect, per collective kind.
+
+    Ring models (result shape R is the per-device, post-op shape):
+      all-gather:          R * (n-1)/n      received
+      all-reduce:          2R * (n-1)/n     (reduce-scatter + all-gather)
+      reduce-scatter:      R * (n-1)        (input = n*R, each dev sends)
+      all-to-all:          R * (n-1)/n
+      collective-permute:  R
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        opm = None
+        for op in _COLLECTIVES:
+            if f" {op}(" in s or f"{op}-start(" in s or f" {op}-start(" in s:
+                opm = op
+                break
+        if opm is None:
+            continue
+        if f"{opm}-done" in s:
+            continue
+        r = _result_bytes(s)
+        # XLA:CPU float-normalization upcasts bf16 collectives to f32
+        # (operand comes through a convert fusion); on TPU they move
+        # native bf16 — count half the bytes.  See EXPERIMENTS.md §Dry-run.
+        if " = f32[" in s and "convert" in s.split("(", 1)[-1]:
+            r *= 0.5
+        n = _group_size(s, num_devices)
+        if n <= 1:
+            continue
+        if opm == "all-gather":
+            b = r * (n - 1) / n
+        elif opm == "all-reduce":
+            b = 2 * r * (n - 1) / n
+        elif opm == "reduce-scatter":
+            b = r * (n - 1)
+        elif opm == "all-to-all":
+            b = r * (n - 1) / n
+        else:  # collective-permute
+            b = r
+        out[opm] += b
+        counts[opm] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    coll_bytes: float            # per device
+    coll_detail: dict
+    peak_memory_bytes: float     # per device (from memory_analysis)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def total_s(self) -> float:
+        """Perfect-overlap execution model: max of the three engines."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Fraction of the time the bound engine does useful work if the
+        other two were free — compute_s / total under perfect overlap."""
+        return self.compute_s / max(self.total_s, 1e-30)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction(),
+            "peak_memory_gb": self.peak_memory_bytes / 1e9,
+            "collectives": {k: v for k, v in self.coll_detail.items()
+                            if k != "counts"},
+            "collective_counts": self.coll_detail.get("counts", {}),
+        }
+
+
+def analyze(compiled, num_devices: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                     + getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = 0.0
+    text = compiled.as_text()
+    coll = collective_bytes(text, num_devices)
+    return Roofline(flops, hbm, coll["total"], coll, peak)
+
+
+def model_flops(cfg, shape) -> float:
+    """6 * N_active * D (train) or 2 * N_active * D (inference), global."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n * tokens
+
+
+_CONVERT_RE = re.compile(r" = f32\[([0-9,]+)\][^ ]* convert\(")
+
+
+def cpu_bf16_inflation_bytes(hlo_text: str, min_bytes: float = 5e7) -> float:
+    """XLA:CPU float-normalizes bf16 to f32 (CPU has no native bf16), so
+    every large bf16 buffer shows up 2x its TPU size in the CPU-target
+    buffer assignment.  Sum the result sizes of large f32 convert() ops —
+    each would be half the size (and usually fused away) on TPU.  Used to
+    report a TPU-adjusted peak alongside the raw CPU number; the
+    adjustment is approximate (liveness unknown) and documented in
+    EXPERIMENTS.md §Dry-run.
+    """
+    total = 0.0
+    for m in _CONVERT_RE.finditer(hlo_text):
+        n = 1
+        for d in m.group(1).split(","):
+            n *= int(d)
+        if n * 4 >= min_bytes:
+            total += n * 4
+    return total

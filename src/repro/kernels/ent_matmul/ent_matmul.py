@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: EN-T digit-plane int8 matmul (the paper's technique).
+
+The software twin of the EN-T array: weights arrive PRE-ENCODED as four
+signed digit planes p_i in {-2,...,2} with W = sum_i p_i 4^i (the hoisted
+edge encoder of paper §3.1 runs once, at quantization time — see
+repro.core.multiplier.ent_digit_planes).  The kernel computes
+
+    acc = sum_i ( X @ p_i ) << 2i          (bit-exact int32)
+
+i.e. the partial-product-plane accumulation the EN-T PEs perform, with
+the 4^i combine done as shift-adds.  Per-channel dequant scales are fused
+in the epilogue, making this a drop-in for the serving matmul.
+
+Grid (m, n, k) with an int32 VMEM accumulator carried across k; the four
+plane matmuls are unrolled inside the kernel so each X block is read once
+from VMEM for all four planes (the in-kernel form of the paper's reuse).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NUM_PLANES = 4  # int8 -> 4 radix-4 digit planes (carry provably dead)
+
+
+def _kernel(x_ref, p_ref, sx_ref, sw_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    contrib = None
+    for i in range(NUM_PLANES):  # unrolled: X stays resident in VMEM
+        term = jax.lax.dot_general(
+            x, p_ref[i], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        term = term << (2 * i)   # 4**i combine: pure shift-add
+        contrib = term if contrib is None else contrib + term
+    acc_ref[...] += contrib
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        o_ref[...] = (acc * sx_ref[...] * sw_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def ent_matmul(
+    x: jax.Array,           # [M, K] int8 activations
+    planes: jax.Array,      # [4, K, N] int8 EN-T digit planes of the weight
+    scale_x: jax.Array,     # [M, 1] f32
+    scale_w: jax.Array,     # [1, N] f32
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    p, k2, n = planes.shape
+    assert p == NUM_PLANES and k == k2, (x.shape, planes.shape)
+    assert scale_x.shape == (m, 1) and scale_w.shape == (1, n)
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        "pad operands to block multiples", (m, n, k), (block_m, block_n, block_k))
+    nk = k // block_k
+    grid = (m // block_m, n // block_n, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, t: (i, t)),
+            pl.BlockSpec((NUM_PLANES, block_k, block_n), lambda i, j, t: (0, t, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, t: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, t: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, planes, scale_x, scale_w)

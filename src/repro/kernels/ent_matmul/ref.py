@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the EN-T digit-plane matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ent_matmul_ref(x, planes, scale_x, scale_w, out_dtype=jnp.float32):
+    """Reference: reconstruct W from planes, matmul in int32, dequant."""
+    n_planes = planes.shape[0]
+    weights = jnp.asarray([4**i for i in range(n_planes)], jnp.int32)
+    w = jnp.sum(planes.astype(jnp.int32) * weights[:, None, None], axis=0)
+    acc = jnp.matmul(x.astype(jnp.int32), w)
+    return (acc.astype(jnp.float32) * scale_x * scale_w).astype(out_dtype)
+
+
+def ent_matmul_int32_ref(x, planes):
+    """Bit-exactness oracle (no scales): int32 accumulator."""
+    n_planes = planes.shape[0]
+    weights = jnp.asarray([4**i for i in range(n_planes)], jnp.int32)
+    w = jnp.sum(planes.astype(jnp.int32) * weights[:, None, None], axis=0)
+    return jnp.matmul(x.astype(jnp.int32), w)

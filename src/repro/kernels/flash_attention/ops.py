@@ -1,0 +1,30 @@
+"""Public op: attention with backend dispatch (Pallas on TPU, oracle on CPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_blockwise, attention_ref
+
+# sequences at or above this use the O(chunk)-memory blockwise path when
+# the Pallas kernel is unavailable (CPU dry-run / tests)
+BLOCKWISE_THRESHOLD = 2048
+
+
+def attention(q, k, v, *, causal=True, window=None, scale=None,
+              use_kernel: str = "auto", **block_kw):
+    if use_kernel == "auto":
+        if jax.default_backend() == "tpu":
+            use_kernel = "pallas"
+        elif k.shape[2] >= BLOCKWISE_THRESHOLD:
+            use_kernel = "blockwise"
+        else:
+            use_kernel = "ref"
+    if use_kernel == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    if use_kernel == "blockwise":
+        return attention_blockwise(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+    return flash_attention(q, k, v, causal=causal, window=window, scale=scale,
+                           interpret=(use_kernel == "interpret"), **block_kw)

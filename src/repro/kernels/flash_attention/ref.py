@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for flash attention.
+
+``attention_ref`` materializes the [Sq, Skv] score matrix (exact oracle
+for small shapes).  ``attention_blockwise`` is the same math with online
+softmax over kv chunks via lax.scan — O(chunk) memory, used as the
+portable long-sequence path (the Pallas kernel's algorithm, in jnp).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_blockwise(q, k, v, *, causal=True, window=None, scale=None,
+                        chunk=1024):
+    """Online-softmax attention, kv-chunked (flash semantics in jnp).
+
+    Memory per step is O(Sq x chunk) instead of O(Sq x Skv) — the
+    portable path for 32k prefill and the CPU stand-in for the Pallas
+    kernel (identical math, same masking semantics).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    nkv = skv // chunk
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32).reshape(b, hkv, nkv, chunk, d)
+    vf = v.astype(jnp.float32).reshape(b, hkv, nkv, chunk, d)
+    kf = jnp.moveaxis(kf, 2, 0)       # [nkv, B, Hkv, C, D]
+    vf = jnp.moveaxis(vf, 2, 0)
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ki, vi, idx = inp
+        kr = jnp.repeat(ki, group, axis=1)     # [B, Hq, C, D]
+        vr = jnp.repeat(vi, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kr)
+        kv_pos = idx * chunk + jnp.arange(chunk)[None, :]
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window is not None:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, -1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vr)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, hq, sq, 1), -1e30, jnp.float32),
+            jnp.zeros((b, hq, sq, 1), jnp.float32),
+            jnp.zeros((b, hq, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (kf, vf, jnp.arange(nkv)))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the w8a8 matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x, w, scale_x, scale_w, out_dtype=jnp.bfloat16):
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+    return (acc.astype(jnp.float32) * scale_x * scale_w).astype(out_dtype)

@@ -1,0 +1,23 @@
+"""Public op: SSD scan with backend dispatch."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import (  # noqa: F401
+    ssd_decode_step_ref, ssd_scan_chunked, ssd_scan_ref)
+
+
+def ssd(x, dt, a, b, c, *, chunk: int = 128, use_kernel: str = "auto"):
+    if use_kernel == "auto":
+        if jax.default_backend() == "tpu":
+            use_kernel = "pallas"
+        else:  # chunked jnp: same algorithm, per-chunk (not per-step) state
+            use_kernel = "chunked" if x.shape[1] > chunk else "ref"
+    if use_kernel == "ref":
+        return ssd_scan_ref(x, dt, a, b, c)
+    if use_kernel == "chunked":
+        return ssd_scan_chunked(x, dt, a, b, c, chunk=chunk)
+    return ssd_scan(x, dt, a, b, c, chunk=chunk,
+                    interpret=(use_kernel == "interpret"))

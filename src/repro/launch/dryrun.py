@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (before ANY other import — jax locks the device count on first init)
+if os.environ.get("_REPRO_EXTRA_XLA"):
+    os.environ["XLA_FLAGS"] += " " + os.environ["_REPRO_EXTRA_XLA"]
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first import side effect: the XLA_FLAGS above create 512
+placeholder host devices BEFORE jax initializes, so jax.make_mesh can
+build the production meshes.  Never set this in conftest/pyproject —
+tests and benches see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Success criterion: .lower().compile() for the 16x16 (256-chip) mesh AND
+the 2x16x16 (512-chip) multi-pod mesh; prints memory_analysis (fits) and
+cost_analysis (roofline terms) and writes one JSON record per cell.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro import sharding as shd
+
+
+def shardings_for(kind, args, mesh, profile="2d"):
+    """in_shardings tree matching the (params, ...) arg tuple."""
+    if kind == "train":
+        params, opt_state, batch = args
+        pspec = shd.params_shardings(params, mesh, profile)
+        ospec = {"adam": {
+            "m": shd.params_shardings(opt_state["adam"]["m"], mesh, profile),
+            "v": shd.params_shardings(opt_state["adam"]["v"], mesh, profile),
+            "step": shd.replicated(mesh),
+        }}
+        return (pspec, ospec, shd.batch_shardings(batch, mesh))
+    if kind == "prefill":
+        params, batch = args
+        return (shd.params_shardings(params, mesh, profile),
+                shd.batch_shardings(batch, mesh))
+    params, cache, tok = args
+    return (shd.params_shardings(params, mesh, profile),
+            shd.cache_shardings(cache, mesh),
+            shd.batch_shardings(tok, mesh))
+
+
+def _act_spec(mesh, profile):
+    from jax.sharding import PartitionSpec as P
+    da = shd.data_axes(mesh)
+    if profile == "fsdp":    # batch over every axis, activations local
+        flat = (da + ("model",)) if isinstance(da, tuple) else (da, "model")
+        return P(flat, None, None)
+    return P(da, "model", None)       # Megatron seq parallelism
+
+
+def _compile_once(arch, shape_name, mesh, cfg=None, tcfg=None,
+                  scan_unroll=False, profile="2d", cfg_transform=None,
+                  quantized=False, kv_quant=False,
+                  moe_rank_major=False):
+    act = _act_spec(mesh, profile)
+    if cfg_transform is not None:
+        from repro.configs import get_config
+        cfg = cfg_transform(cfg or get_config(arch))
+    spec = input_specs(arch, shape_name, cfg=cfg, tcfg=tcfg,
+                       scan_unroll=scan_unroll, act_sharding=act,
+                       dist=(mesh, shd.data_axes(mesh)), quantized=quantized,
+                       kv_quant=kv_quant, moe_rank_major=moe_rank_major)
+    step, args, kind = spec[0], spec[1], spec[2]
+    in_sh = shardings_for(kind, args, mesh, profile)
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            step, in_shardings=in_sh,
+            donate_argnums=((0, 1) if kind in ("train", "decode") else ()))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, kind, t_lower, t_compile
+
+
+def extrapolated_roofline(arch, shape_name, mesh, tcfg=None, profile="2d",
+                          cfg_transform=None, quantized=False, kv_quant=False):
+    """Roofline terms corrected for lax.scan trip counts.
+
+    XLA's cost_analysis counts a scan body ONCE regardless of trips, so
+    we compile depth-1 and depth-2 variants of the arch (full width!) and
+    extrapolate: term(G) = term(1) + (G-1) * (term(2) - term(1)).
+    """
+    from dataclasses import replace
+    cfg = get_config(arch)
+    glen = len(cfg.group)
+    c1 = replace(cfg, num_layers=glen)
+    c2 = replace(cfg, num_layers=2 * glen)
+    kw = dict(scan_unroll=True, profile=profile, cfg_transform=cfg_transform,
+              quantized=quantized, kv_quant=kv_quant)
+    comp1, _, _, _ = _compile_once(arch, shape_name, mesh, cfg=c1, tcfg=tcfg, **kw)
+    comp2, _, _, _ = _compile_once(arch, shape_name, mesh, cfg=c2, tcfg=tcfg, **kw)
+    r1 = rl.analyze(comp1, mesh.size)
+    r2 = rl.analyze(comp2, mesh.size)
+    g = cfg.num_groups
+    # the microbatch-accumulation scan body is also counted once by
+    # cost_analysis: scale by the number of microbatches
+    shape = SHAPES[shape_name]
+    n_micro = 1
+    if shape.kind == "train":
+        default_n = 8 if cfg.param_count() > 6e10 else 4
+        mb = tcfg.microbatch if tcfg else max(shape.global_batch // default_n, 1)
+        if mb:
+            n_micro = shape.global_batch // mb
+
+    def ext(a, b):
+        return (a + (g - 1) * max(b - a, 0.0)) * n_micro
+
+    coll_detail = {k: ext(r1.coll_detail.get(k, 0.0), r2.coll_detail.get(k, 0.0))
+                   for k in r1.coll_detail if k != "counts"}
+    coll_detail["counts"] = r2.coll_detail.get("counts", {})
+    return rl.Roofline(
+        flops=ext(r1.flops, r2.flops),
+        hbm_bytes=ext(r1.hbm_bytes, r2.hbm_bytes),
+        coll_bytes=ext(r1.coll_bytes, r2.coll_bytes),
+        coll_detail=coll_detail,
+        peak_memory_bytes=0.0,
+    )
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, roofline: bool = True, tcfg=None,
+             profile: str = "2d", cfg_transform=None, quantized=False,
+             kv_quant=False, moe_rank_major=False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.is_sub_quadratic:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi_pod" if multi_pod else "single_pod",
+                "status": "skipped",
+                "reason": "pure full-attention arch; long_500k needs "
+                          "sub-quadratic attention (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    compiled, kind, t_lower, t_compile = _compile_once(
+        arch, shape_name, mesh, tcfg=tcfg, profile=profile,
+        cfg_transform=cfg_transform, quantized=quantized, kv_quant=kv_quant,
+        moe_rank_major=moe_rank_major)
+    mem = compiled.memory_analysis()
+    inflation = rl.cpu_bf16_inflation_bytes(compiled.as_text())
+    if roofline:
+        roof = extrapolated_roofline(arch, shape_name, mesh, tcfg=tcfg,
+                                     profile=profile,
+                                     cfg_transform=cfg_transform,
+                                     quantized=quantized, kv_quant=kv_quant)
+    else:
+        roof = rl.analyze(compiled, mesh.size)
+    mf = rl.model_flops(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi_pod" if multi_pod else "single_pod",
+        "profile": profile,
+        "status": "ok",
+        "kind": kind,
+        "num_devices": mesh.size,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "alias_gb": mem.alias_size_in_bytes / 1e9,
+            "peak_per_device_gb": (mem.argument_size_in_bytes
+                                   + mem.output_size_in_bytes
+                                   + mem.temp_size_in_bytes
+                                   - mem.alias_size_in_bytes) / 1e9,
+            # XLA:CPU float-normalization doubles bf16 buffers; TPU keeps
+            # them native (roofline.cpu_bf16_inflation_bytes)
+            "cpu_bf16_inflation_gb": inflation / 1e9,
+            # clamped: never below live args+outputs, never above raw
+            "peak_tpu_adjusted_gb": max(
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                - mem.alias_size_in_bytes,
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+                 - inflation / 2)) / 1e9,
+        },
+        "roofline": roof.as_dict(),
+        "model_flops_global": mf,
+        "model_flops_per_dev": mf / mesh.size,
+        "useful_flops_ratio": (mf / mesh.size) / max(roof.flops, 1.0),
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] "
+              f"compile {t_compile:.0f}s  "
+              f"peak/dev {rec['memory']['peak_per_device_gb']:.2f} GB "
+              f"(tpu-adj {rec['memory']['peak_tpu_adjusted_gb']:.2f}) "
+              f"compute {roof.compute_s*1e3:.2f}ms "
+              f"memory {roof.memory_s*1e3:.2f}ms "
+              f"collective {roof.collective_s*1e3:.2f}ms "
+              f"-> {roof.bottleneck}")
+        print(f"  memory_analysis: args {rec['memory']['argument_gb']:.1f}GB "
+              f"out {rec['memory']['output_gb']:.1f}GB "
+              f"temp {rec['memory']['temp_gb']:.1f}GB (per device)")
+        print(f"  cost_analysis: {roof.flops:.3e} flops/dev, "
+              f"{roof.hbm_bytes:.3e} HBM bytes/dev, "
+              f"{roof.coll_bytes:.3e} collective bytes/dev")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}_{shape}_{'mp' if mp else 'sp'}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            # roofline probes are a single-pod deliverable; multi-pod
+            # cells prove the pod axis shards/compiles
+            rec = run_cell(arch, shape, multi_pod=mp, roofline=not mp)
+        except Exception as e:  # a failing cell is a bug in our system
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "multi_pod" if mp else "single_pod",
+                   "status": "failed", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

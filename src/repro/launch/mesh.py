@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax
+device state.  Single pod: 16x16 = 256 chips (data x model).  Multi-pod:
+2 x 16 x 16 = 512 chips with the leading "pod" axis as the cross-pod
+(DCN) data-parallel axis.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/examples (e.g. (2,2) on 4 host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

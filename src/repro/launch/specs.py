@@ -1,0 +1,139 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape)`` returns the abstract (params, opt_state,
+batch) / (params, cache, tokens) trees that launch/dryrun.py lowers —
+weak-type-correct and shardable, never materialized.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, OptimConfig, ShapeConfig, TrainConfig
+from repro.models.transformer import build_model
+from repro.optim import adamw
+from repro.runtime.train_loop import make_train_step
+from repro.runtime.serve_loop import make_prefill_step, make_serve_step
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+        tree)
+
+
+def abstract_params(cfg: ModelConfig):
+    model = build_model(cfg)
+    return _sds(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.modality == "text":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    return specs
+
+
+def input_specs(arch: str, shape_name: str, *,
+                ocfg: OptimConfig | None = None,
+                tcfg: TrainConfig | None = None,
+                cfg: ModelConfig | None = None,
+                scan_unroll: bool = False,
+                act_sharding=None,
+                dist=None,
+                quantized: bool = False,
+                kv_quant: bool = False,
+                moe_rank_major: bool = False):
+    """(step_fn, args_tree, kind) for one benchmark cell.
+
+    train:   step(params_f32, opt_state, batch)         -> params', state', metrics
+    prefill: step(params_bf16, batch)                   -> last-token logits
+    decode:  step(params_bf16, cache, tokens|embeds)    -> (logits, cache)
+
+    ``cfg`` overrides the registry config and ``scan_unroll`` inlines the
+    layer scan (both used by the dry-run's depth-1/depth-2 roofline
+    extrapolation).  ``act_sharding`` is the residual-stream
+    PartitionSpec (Megatron sequence parallelism) — only resolvable under
+    a mesh context.  Train cells default to remat="full" — the
+    production setting at these scales.
+    """
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    # sequence-sharded activations only help full-sequence passes
+    if shape.kind == "decode":
+        act_sharding = None
+    model = build_model(cfg, scan_unroll=scan_unroll, act_sharding=act_sharding,
+                        dist=dist, kv_quant=kv_quant)
+    ocfg = ocfg or OptimConfig()
+    # remat=full + microbatching: the production memory setting at this
+    # scale (activation temps shrink n_micro-fold; FSDP gathers run per
+    # microbatch).  The biggest archs take 8 microbatches.
+    n_micro = 8 if cfg.param_count() > 6e10 else 4
+    tcfg = tcfg or TrainConfig(seq_len=shape.seq_len,
+                               global_batch=shape.global_batch,
+                               microbatch=max(shape.global_batch // n_micro, 1),
+                               remat="full")
+
+    if shape.kind == "train":
+        params = abstract_params(cfg)
+        opt_state = {"adam": {
+            "m": _cast_tree(params, jnp.float32),
+            "v": _cast_tree(params, jnp.float32),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }}
+        data_axes = grad_sh = None
+        if dist is not None:
+            from repro import sharding as shd
+            mesh, data_axes = dist
+            grad_sh = shd.params_shardings(params, mesh)
+        step = make_train_step(model, ocfg, tcfg, data_axes=data_axes,
+                               grad_shardings=grad_sh)
+        return step, (params, opt_state, batch_specs(cfg, shape)), "train"
+
+    # serving cells run bf16 weights by default; quantized=True lowers the
+    # EN-T w8a8 path instead (int8 + per-channel scales; see §Perf)
+    params = _cast_tree(abstract_params(cfg), jnp.dtype(cfg.compute_dtype))
+    if quantized:
+        from repro.configs.base import QuantConfig
+        from repro.quant.quantize import quantize_params
+        params = _sds(jax.eval_shape(
+            lambda p: quantize_params(p, QuantConfig(enabled=True,
+                                                     ent_encode=False)),
+            params))
+    if moe_rank_major and cfg.moe is not None and dist is not None:
+        from repro.models.moe import rank_major_params
+        msize = dist[0].shape["model"]
+        params = _sds(jax.eval_shape(
+            lambda p: rank_major_params(p, msize), params))
+    if shape.kind == "prefill":
+        step = make_prefill_step(model)
+        b = batch_specs(cfg, shape)
+        b.pop("labels")
+        return step, (params, b), "prefill"
+
+    # decode: one new token against a seq_len-deep cache
+    cache = _sds(jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)))
+    if cfg.modality == "text":
+        tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        step = make_serve_step(model)
+        return step, (params, cache, tok), "decode"
+    emb = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+
+    def embed_step(params, cache, embeds):
+        return model.decode_step(params, cache, embeds=embeds)
+
+    return embed_step, (params, cache, emb), "decode"

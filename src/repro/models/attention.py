@@ -1,0 +1,153 @@
+"""GQA/MHA attention layer with RoPE, sliding window, and KV cache decode.
+
+Training/prefill run the flash-attention op (Pallas on TPU, oracle on
+CPU).  Decode maintains a KV cache; models with a sliding window use a
+ring buffer of size ``window`` (slot = pos % window) so the long_500k
+cell carries O(window) state instead of O(seq).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.models import layers as L
+
+
+def init(key, cfg: ModelConfig):
+    hd, h, hkv, d = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], cfg, d, h * hd, bias=cfg.qkv_bias),
+        "wk": L.dense_init(ks[1], cfg, d, hkv * hd, bias=cfg.qkv_bias),
+        "wv": L.dense_init(ks[2], cfg, d, hkv * hd, bias=cfg.qkv_bias),
+        "wo": L.dense_init(ks[3], cfg, h * hd, d, scale=(h * hd) ** -0.5),
+    }
+
+
+def _project(cfg: ModelConfig, p, x, positions):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    dt = L.cdtype(cfg)
+    q = L.dense_apply(p["wq"], x, dt).reshape(b, s, cfg.num_heads, hd)
+    k = L.dense_apply(p["wk"], x, dt).reshape(b, s, cfg.num_kv_heads, hd)
+    v = L.dense_apply(p["wv"], x, dt).reshape(b, s, cfg.num_kv_heads, hd)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply(cfg: ModelConfig, p, x, positions=None):
+    """Full-sequence (train / prefill) forward.  x: [B, S, D]."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    q, k, v = _project(cfg, p, x, positions)
+    out = attn_ops.attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True, window=cfg.sliding_window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return L.dense_apply(p["wo"], out, L.cdtype(cfg))
+
+
+# --- KV cache decode ---------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """Ring-buffer length: the sliding window bounds cache size."""
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+               quantized: bool = False):
+    w = cache_len(cfg, max_len)
+    shape = (batch, w, cfg.num_kv_heads, cfg.head_dim)
+    if quantized:
+        # int8 KV cache with per-(slot, head) scales: halves the decode
+        # working set — the dominant HBM term at long context (§Perf)
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(sshape, jnp.bfloat16),
+                "v_s": jnp.zeros(sshape, jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quantize_kv(t):
+    """[B, 1, H, hd] -> (int8 values, bf16 per-head scale)."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def decode_step(cfg: ModelConfig, p, x, cache, pos):
+    """One-token decode.  x: [B, 1, D]; pos: scalar int32 (current index).
+
+    Returns (y [B, 1, D], updated cache).  Keys are rotated at write time
+    with their absolute position; ring slots are masked by reconstructing
+    each slot's absolute position from ``pos``.  Supports bf16 and
+    quantized (int8 + per-head scale) caches; scales are folded EXACTLY
+    into the attention dots (K: after the q.k dot; V: into the
+    probabilities), so int8 KV changes bytes, not math beyond round-off.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project(cfg, p, x, positions)          # q: [B,1,H,hd]
+    w = cache["k"].shape[1]
+    slot = pos % w if cfg.sliding_window else pos
+    quantized = "k_s" in cache
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        upd = jax.lax.dynamic_update_slice_in_dim
+        ck = upd(cache["k"], kq, slot, 1)
+        cv = upd(cache["v"], vq, slot, 1)
+        cks = upd(cache["k_s"], ks, slot, 1)
+        cvs = upd(cache["v_s"], vs, slot, 1)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, 1)
+
+    # absolute position held by each ring slot (== slot index when the
+    # cache is not a ring buffer)
+    idx = jnp.arange(w)
+    if cfg.sliding_window:
+        slot_pos = pos - ((pos - idx) % w)
+    else:
+        slot_pos = idx
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if cfg.sliding_window:
+        valid &= slot_pos > pos - cfg.sliding_window
+
+    # grouped-query attention against the cache (einsum path: the mask is
+    # position-scattered, which the contiguous flash kernel can't express).
+    # The cache stays in its storage dtype — f32 happens only in the
+    # contraction accumulator (preferred_element_type), never as a
+    # materialized f32 copy of the multi-GB cache.
+    group = cfg.num_heads // cfg.num_kv_heads
+    qh = q[:, 0].reshape(b, cfg.num_kv_heads, group, cfg.head_dim)
+    dt = L.cdtype(cfg)
+    kop = ck if not quantized else ck.astype(dt)
+    s = jnp.einsum("bhgd,bwhd->bhgw", qh.astype(dt), kop,
+                   preferred_element_type=jnp.float32) * (cfg.head_dim**-0.5)
+    if quantized:  # fold the per-slot K scale in after the dot (exact)
+        s = s * cks[..., 0].transpose(0, 2, 1)[:, :, None, :].astype(jnp.float32)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    if quantized:  # fold the per-slot V scale into the probabilities
+        pattn = pattn * cvs[..., 0].transpose(0, 2, 1)[:, :, None, :].astype(jnp.float32)
+        vop = cv.astype(dt)
+    else:
+        vop = cv
+    out = jnp.einsum("bhgw,bwhd->bhgd", pattn.astype(dt), vop,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(L.cdtype(cfg))
+    y = L.dense_apply(p["wo"], out, L.cdtype(cfg))
+    new = {"k": ck, "v": cv}
+    if quantized:
+        new.update(k_s=cks, v_s=cvs)
+    return y, new

@@ -1,0 +1,151 @@
+"""Mamba-2 (SSD) mixer layer: in_proj -> causal conv -> SSD scan -> gated out.
+
+Follows the Mamba-2 block: a single input projection produces
+[z | x | B | C | dt]; x/B/C pass through a depthwise causal conv; the SSD
+scan (Pallas kernel on TPU, recurrence oracle on CPU) evolves the [P, N]
+state per head; output is RMS-norm-gated by z and projected back.
+
+Decode carries (conv_state [B, W-1, conv_dim], ssd_state [B, H, P, N]) —
+O(1) in sequence length, which is what makes the long_500k cell feasible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan.ref import ssd_decode_step_ref
+from repro.models import layers as L
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.ngroups * s.state_dim
+    return d_inner, nheads, conv_dim
+
+
+def init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = dims(cfg)
+    ks = jax.random.split(key, 5)
+    pd = L.pdtype(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.ngroups * s.state_dim + nheads
+    import numpy as np
+    dt = jnp.exp(jax.random.uniform(
+        ks[2], (nheads,), minval=float(np.log(s.dt_min)),
+        maxval=float(np.log(s.dt_max))))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": L.dense_init(ks[0], cfg, cfg.d_model, d_in_proj),
+        "conv": (jax.random.normal(ks[1], (s.conv_width, conv_dim)) *
+                 (s.conv_width**-0.5)).astype(pd),
+        "conv_bias": jnp.zeros((conv_dim,), pd),
+        "a_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.asarray(dt_bias, pd),
+        "d_skip": jnp.ones((nheads,), pd),
+        "gate_norm": {"scale": jnp.ones((d_inner,), pd)},
+        "out_proj": L.dense_init(ks[4], cfg, d_inner, cfg.d_model,
+                                 scale=d_inner**-0.5),
+    }
+
+
+def _split(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssm
+    d_inner, nheads, _ = dims(cfg)
+    gn = s.ngroups * s.state_dim
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn], -1)
+    return z, xin, bmat, cmat, dt
+
+
+def _gated_out(cfg, p, y_flat, z):
+    # RMSNorm(y * silu(z)) gating, Mamba-2 convention
+    g = y_flat * jax.nn.silu(z.astype(jnp.float32)).astype(y_flat.dtype)
+    g32 = g.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(g32), -1, keepdims=True)
+    g = (g32 * jax.lax.rsqrt(ms + cfg.norm_eps)
+         * p["gate_norm"]["scale"].astype(jnp.float32)).astype(L.cdtype(cfg))
+    return L.dense_apply(p["out_proj"], g, L.cdtype(cfg))
+
+
+def apply(cfg: ModelConfig, p, x):
+    """Full-sequence forward.  x: [B, S, D]."""
+    s = cfg.ssm
+    b, slen, _ = x.shape
+    d_inner, nheads, conv_dim = dims(cfg)
+    dtype = L.cdtype(cfg)
+
+    zxbcdt = L.dense_apply(p["in_proj"], x, dtype)
+    z, xin, bmat, cmat, dtt = _split(cfg, zxbcdt)
+
+    # depthwise causal conv over [x | B | C]
+    xbc = jnp.concatenate([xin, bmat, cmat], -1)             # [B, S, conv_dim]
+    pad = jnp.zeros((b, s.conv_width - 1, conv_dim), xbc.dtype)
+    xbc_pad = jnp.concatenate([pad, xbc], 1)
+    windows = jnp.stack(
+        [xbc_pad[:, i:i + slen] for i in range(s.conv_width)], axis=-1)
+    xbc = jnp.einsum("bsdw,wd->bsd", windows.astype(jnp.float32),
+                     p["conv"].astype(jnp.float32))
+    xbc = jax.nn.silu(xbc + p["conv_bias"].astype(jnp.float32)).astype(dtype)
+    xin, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + s.ngroups * s.state_dim], -1)
+
+    xh = xin.reshape(b, slen, nheads, s.head_dim)
+    bm = bmat.reshape(b, slen, s.ngroups, s.state_dim)
+    cm = cmat.reshape(b, slen, s.ngroups, s.state_dim)
+    dt_soft = jax.nn.softplus(dtt.astype(jnp.float32)
+                              + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                   # [H] < 0
+
+    y = ssd_ops.ssd(xh.astype(jnp.float32), dt_soft, a,
+                    bm.astype(jnp.float32), cm.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y_flat = y.reshape(b, slen, d_inner).astype(dtype)
+    return _gated_out(cfg, p, y_flat, z)
+
+
+# --- Decode ------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, nheads, s.head_dim, s.state_dim), jnp.float32),
+    }
+
+
+def decode_step(cfg: ModelConfig, p, x, cache, pos):
+    """One-token decode.  x: [B, 1, D] -> (y [B, 1, D], new cache)."""
+    del pos  # SSM state is position-free
+    s = cfg.ssm
+    b = x.shape[0]
+    d_inner, nheads, conv_dim = dims(cfg)
+    dtype = L.cdtype(cfg)
+
+    zxbcdt = L.dense_apply(p["in_proj"], x[:, 0], dtype)     # [B, d_in_proj]
+    z, xin, bmat, cmat, dtt = _split(cfg, zxbcdt)
+
+    xbc = jnp.concatenate([xin, bmat, cmat], -1)             # [B, conv_dim]
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], 1)  # [B, W, conv_dim]
+    conv_out = jnp.einsum("bwd,wd->bd", hist.astype(jnp.float32),
+                          p["conv"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_bias"].astype(jnp.float32)).astype(dtype)
+    new_conv = hist[:, 1:]
+    xin, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + s.ngroups * s.state_dim], -1)
+
+    xh = xin.reshape(b, nheads, s.head_dim).astype(jnp.float32)
+    bm = bmat.reshape(b, s.ngroups, s.state_dim).astype(jnp.float32)
+    cm = cmat.reshape(b, s.ngroups, s.state_dim).astype(jnp.float32)
+    dt_soft = jax.nn.softplus(dtt.astype(jnp.float32)
+                              + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    new_ssd, y = ssd_decode_step_ref(cache["ssd"], xh, dt_soft, a, bm, cm)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y_flat = y.reshape(b, 1, d_inner).astype(dtype)
+    out = _gated_out(cfg, p, y_flat, z[:, None])
+    return out, {"conv": new_conv, "ssd": new_ssd}

@@ -1,0 +1,71 @@
+"""Distributed-gradient utilities: accumulation and int8 compression.
+
+``compress_int8`` implements error-feedback int8 gradient compression for
+the cross-pod all-reduce: each pod reduces locally in full precision,
+quantizes the pod-level gradient to int8 with a per-tensor scale, and the
+residual is fed back into the next step (1-bit-Adam-style EF).  At 512
+chips the pod axis is the slow DCN link, so 4x fewer bytes there is the
+win; the EF state keeps convergence unbiased in expectation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate(loss_and_grad_fn, params, microbatches, grad_shardings=None,
+               prepin: bool = False, grad_dtype=None):
+    """Gradient accumulation over a leading microbatch axis via lax.scan.
+
+    ``grad_shardings``: optional tree of NamedShardings (the params'
+    shardings) pinned onto the accumulator so it never replicates.
+    ``prepin`` additionally pins each microbatch's raw gradient BEFORE
+    the accumulate add — hints GSPMD to reduce-scatter the wgrads into
+    the FSDP shard instead of all-reducing them replicated (§Perf).
+    """
+    def pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_shardings)
+
+    def body(acc, mb):
+        (loss, aux), g = loss_and_grad_fn(params, mb)
+        if grad_dtype is not None:
+            # reduce/accumulate in bf16: halves the per-microbatch grad
+            # all-reduce bytes (the dominant collective for very large
+            # models); the f32 master weights keep the update exact-ish
+            g = jax.tree.map(lambda x: x.astype(grad_dtype), g)
+        if prepin:
+            g = pin(g)
+        acc_g, acc_loss, n = acc
+        acc_g = pin(jax.tree.map(jnp.add, acc_g, g))
+        return (acc_g, acc_loss + loss, n + 1), aux
+
+    acc_dt = jnp.dtype(grad_dtype) if grad_dtype is not None else jnp.float32
+    zero = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params))
+    (g, loss, n), _ = jax.lax.scan(
+        body, (zero, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        microbatches)
+    inv = 1.0 / jnp.maximum(n, 1.0)
+    return loss * inv, jax.tree.map(lambda x: x * inv, g)
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8(grads, ef_state):
+    """(quantized-dequantized grads, new EF state).  Per-tensor absmax."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([p[0] for p in pairs]),
+            treedef.unflatten([p[1] for p in pairs]))

@@ -1,0 +1,32 @@
+"""LR schedules: linear warmup into cosine / WSD / linear decay.
+
+WSD (warmup-stable-decay) is MiniCPM's schedule (arXiv:2404.06395):
+constant LR after warmup, then a short exponential-ish decay over the
+final ``wsd_decay_frac`` of training — implemented as the paper's
+linear-in-log decay to 10% of peak.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+
+def lr_at(cfg: OptimConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = (jnp.minimum(step / cfg.warmup_steps, 1.0)
+            if cfg.warmup_steps > 0 else jnp.float32(1.0))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * t)) * 0.9 + 0.1
+    elif cfg.schedule == "wsd":
+        start = 1.0 - cfg.wsd_decay_frac
+        d = jnp.clip((t - start) / cfg.wsd_decay_frac, 0.0, 1.0)
+        decay = jnp.exp(d * jnp.log(0.1))      # 1.0 -> 0.1 exponentially
+    elif cfg.schedule == "linear":
+        decay = 1.0 - 0.9 * t
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * decay

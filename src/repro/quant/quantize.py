@@ -1,0 +1,120 @@
+"""EN-T w8a8 serving quantization.
+
+``quantize_params`` walks a float param tree and replaces every matmul
+kernel (minus skip patterns) with a quantized record:
+
+    {"q": int8 [I, O], "scale": f32 [1, O],          # per-out-channel
+     "planes": int8 [4, I, O]}                       # EN-T digit planes
+
+The planes are produced ONCE here by the hoisted edge encoder
+(repro.core.multiplier.ent_digit_planes) — the paper's computation reuse
+amortized over the serving lifetime; every subsequent matmul consumes the
+encoded weights (repro.kernels.ent_matmul on TPU, its oracle elsewhere).
+
+``qdense_apply`` is the quantized counterpart of layers.dense_apply:
+dynamic per-row activation quantization + int accumulation + fused
+dequant.  ``layers.dense_apply`` dispatches here when it sees a "q" key,
+so the whole model zoo serves quantized without code changes.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core.multiplier import ent_digit_planes
+from repro.kernels.ent_matmul import ops as ent_ops
+from repro.kernels.int8_matmul import ops as int8_ops
+
+__all__ = ["quantize_weight", "quantize_params", "quantize_acts",
+           "qdense_apply", "dequantize_weight"]
+
+
+def quantize_weight(w, *, ent_encode: bool = True, per_channel: bool = True):
+    """Symmetric int8 quantization of a [I, O] kernel (+ EN-T planes)."""
+    w32 = w.astype(jnp.float32)
+    if per_channel:
+        amax = jnp.max(jnp.abs(w32), axis=0, keepdims=True)     # [1, O]
+    else:
+        amax = jnp.max(jnp.abs(w32)).reshape(1, 1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    rec = {"q": q, "scale": scale.astype(jnp.float32)}
+    if ent_encode:
+        rec["planes"] = ent_digit_planes(q)
+    return rec
+
+
+def dequantize_weight(rec):
+    return rec["q"].astype(jnp.float32) * rec["scale"]
+
+
+def quantize_acts(x):
+    """Dynamic symmetric per-row int8 activation quantization.
+
+    x: [..., K] float -> (q int8, scale f32 [..., 1])."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def qdense_apply(rec, x, out_dtype=jnp.bfloat16, use_kernel: str = "auto"):
+    """Quantized matmul: x [..., K] float x rec -> [..., O]."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xq, sx = quantize_acts(x.reshape(-1, k))
+    if "planes" in rec:
+        y = ent_ops.ent_quantized_matmul(
+            xq, rec["planes"], sx, rec["scale"],
+            out_dtype=jnp.float32, use_kernel=use_kernel)
+    else:
+        y = int8_ops.quantized_matmul(
+            xq, rec["q"], sx, rec["scale"],
+            out_dtype=jnp.float32, use_kernel=use_kernel)
+    y = y.astype(out_dtype).reshape(*lead, -1)
+    if "bias" in rec:
+        y = y + rec["bias"].astype(out_dtype)
+    return y
+
+
+def _should_skip(path: str, qcfg: QuantConfig) -> bool:
+    return any(re.search(p, path) for p in qcfg.skip_patterns)
+
+
+def quantize_params(params, qcfg: QuantConfig):
+    """Quantize every 2D kernel leaf-dict not matching skip patterns.
+
+    Returns a new tree where {"kernel": w[, "bias": b]} records become
+    quantized records; everything else passes through unchanged.
+    MoE expert stacks ([..., E, I, O]) and scanned stacks ([G, I, O]) are
+    quantized along their trailing [I, O] with vmapped encoders.
+    """
+    import functools
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if "kernel" in node and not _should_skip(path, qcfg):
+                kern = node["kernel"]
+                if kern.ndim >= 2:
+                    fn = functools.partial(
+                        quantize_weight, ent_encode=qcfg.ent_encode,
+                        per_channel=qcfg.per_channel)
+                    for _ in range(kern.ndim - 2):
+                        fn = jax.vmap(fn, in_axes=0)
+                    rec = fn(kern)
+                    # vmap of dicts keeps leading axes on each leaf; fix
+                    # scale shape contract for stacked kernels
+                    if "bias" in node:
+                        rec["bias"] = node["bias"]
+                    return rec
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, f"{path}/{i}") for i, v in enumerate(node))
+        return node
+
+    return walk(params, "")

@@ -1,0 +1,115 @@
+"""Elastic scaling, failure recovery, and straggler mitigation.
+
+Single-process CPU cannot host real multi-host failures, so this module
+implements the CONTROL LOGIC — the piece that is actually subtle — and
+the tests drive it with simulated host populations:
+
+* **ElasticPlan**: given surviving hosts, choose the largest runnable
+  mesh (keeping the model axis intact, shrinking the data axis), the
+  batch re-split, and which checkpoint shards each survivor re-reads.
+  Re-mesh is always checkpoint-restore-shaped: state is saved sharded,
+  restored under the new mesh's shardings (GSPMD reshards on first use).
+* **StragglerPolicy**: deterministic data sharding (repro.data) makes a
+  shard a pure function of (step, host), so a slow/dead host's shard can
+  be *backfilled* by a designated buddy (skip-and-backfill), or skipped
+  entirely (batch shrinks for that step) — both without coordination
+  beyond the failure signal.
+* **HealthMonitor**: heartbeat bookkeeping with configurable timeout;
+  in production the heartbeats come from the coordinator service, in
+  tests from the simulator.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    data_parallel: int            # new data-axis size
+    model_parallel: int           # unchanged (weights must still fit)
+    active_hosts: tuple[int, ...]
+    batch_per_host: int
+    shard_assignment: dict        # host -> checkpoint shard index to read
+
+    @property
+    def world_size(self) -> int:
+        return self.data_parallel * self.model_parallel
+
+
+def plan_remesh(all_hosts: int, alive: list[int], *, model_parallel: int,
+                global_batch: int, devices_per_host: int = 4) -> ElasticPlan:
+    """Choose the largest power-of-two data axis the survivors support.
+
+    The model axis is sacred (params are TP-sharded across it); the data
+    axis shrinks to the largest size that (a) the surviving device count
+    supports and (b) divides the global batch.
+    """
+    alive = sorted(alive)
+    total_devices = len(alive) * devices_per_host
+    if total_devices < model_parallel:
+        raise RuntimeError(
+            f"cannot remesh: {total_devices} devices < model axis "
+            f"{model_parallel}")
+    max_dp = total_devices // model_parallel
+    dp = 1
+    while dp * 2 <= max_dp and global_batch % (dp * 2) == 0:
+        dp *= 2
+    used_hosts = alive[: (dp * model_parallel) // devices_per_host or 1]
+    # survivors adopt the shard indices of the hosts they replace so the
+    # deterministic data stream and checkpoint shards stay consistent
+    assignment = {h: i for i, h in enumerate(used_hosts)}
+    return ElasticPlan(
+        data_parallel=dp,
+        model_parallel=model_parallel,
+        active_hosts=tuple(used_hosts),
+        batch_per_host=global_batch // max(len(used_hosts), 1),
+        shard_assignment=assignment,
+    )
+
+
+@dataclass
+class StragglerPolicy:
+    """Deadline-based straggler handling with deterministic backfill."""
+
+    deadline_factor: float = 3.0        # x median step time
+    min_observations: int = 8
+    mode: str = "backfill"              # backfill | skip
+
+    def is_straggler(self, host_times: dict, host: int) -> bool:
+        times = sorted(host_times.values())
+        if len(times) < self.min_observations:
+            return False
+        median = times[len(times) // 2]
+        return host_times.get(host, 0.0) > self.deadline_factor * median
+
+    def reassign(self, stragglers: list[int], healthy: list[int]) -> dict:
+        """host -> extra shard index it must also produce this step.
+
+        Deterministic buddy mapping: straggler i's shard goes to
+        healthy[i % len(healthy)] — no negotiation required; every healthy
+        host derives the same mapping from the shared failure signal.
+        """
+        if self.mode == "skip" or not healthy:
+            return {}
+        return {healthy[i % len(healthy)]: s
+                for i, s in enumerate(sorted(stragglers))}
+
+
+@dataclass
+class HealthMonitor:
+    timeout_s: float = 60.0
+    heartbeats: dict = field(default_factory=dict)
+
+    def beat(self, host: int, now: float | None = None):
+        self.heartbeats[host] = time.monotonic() if now is None else now
+
+    def alive(self, hosts: list[int], now: float | None = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h in hosts
+                if now - self.heartbeats.get(h, -1e18) <= self.timeout_s]
+
+    def dead(self, hosts: list[int], now: float | None = None) -> list[int]:
+        a = set(self.alive(hosts, now))
+        return [h for h in hosts if h not in a]

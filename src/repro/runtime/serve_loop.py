@@ -1,0 +1,59 @@
+"""Serving steps: prefill a batch of prompts, then batched decode.
+
+``make_serve_step`` returns the one-token decode function the decode_*
+and long_* dry-run cells lower; ``generate`` is the end-to-end loop used
+by examples and tests (greedy or temperature sampling).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+def make_prefill_step(model: Model):
+    """Returns last-token logits only — full [B, S, V] logits at 32k x 152k
+    vocab would be hundreds of GB; serving only needs the next-token head."""
+    def prefill(params, batch):
+        out = model.apply(params, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"), last_only=True)
+        return out["logits"][:, 0]
+    return prefill
+
+
+def make_serve_step(model: Model):
+    """(params, cache, tokens[B]) -> (logits [B, V], cache) — one token."""
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens=tokens)
+    return serve_step
+
+
+def generate(model: Model, params, prompt_tokens, steps: int, *,
+             temperature: float = 0.0, key=None, max_len: int | None = None):
+    """Greedy/temperature generation.  prompt_tokens: [B, S0] int32."""
+    b, s0 = prompt_tokens.shape
+    max_len = max_len or (s0 + steps)
+    cache = model.init_cache(b, max_len)
+    step = jax.jit(make_serve_step(model))
+
+    # prefill token-by-token through the decode path (exactness over speed
+    # on CPU; TPU serving prefills via model.apply + cache write-through)
+    logits = None
+    for t in range(s0):
+        logits, cache = step(params, cache, prompt_tokens[:, t])
+
+    outs = []
+    tok = None
+    for i in range(steps):
+        if tok is not None:
+            logits, cache = step(params, cache, tok)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        tok = tok.astype(jnp.int32)
+        outs.append(tok)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,80 @@
+"""Training step factory: loss -> grads -> AdamW, with microbatch
+accumulation, remat policy, and optional cross-pod int8 gradient
+compression with error feedback.
+
+``make_train_step`` returns a pure function suitable for jax.jit /
+.lower() under a mesh: (params, opt_state, batch) -> (params, opt_state,
+metrics).  Gradient accumulation reshapes the global batch into
+[n_micro, micro, ...] and lax.scans the loss/grad, which also gives the
+XLA scheduler microbatch boundaries to overlap the DP all-reduce with
+the next microbatch's compute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig, TrainConfig
+from repro.models.transformer import Model, loss_fn
+from repro.optim import adamw, grad as gradlib
+
+
+def make_train_step(model: Model, ocfg: OptimConfig, tcfg: TrainConfig,
+                    data_axes=None, grad_shardings=None):
+    """``data_axes``: mesh axes of the batch dim — re-pinned onto the
+    [n_micro, micro, ...] reshape so microbatching never replicates the
+    tokens.  ``grad_shardings``: the params' shardings, pinned onto the
+    gradient accumulator."""
+    remat = tcfg.remat
+    cdt = jnp.dtype(model.cfg.compute_dtype)
+
+    def lg(params, batch):
+        def loss_of(p):
+            # cast to compute dtype FIRST so FSDP weight all-gathers move
+            # bf16, not f32 master copies (grads flow back f32 through
+            # the convert's transpose)
+            pc = jax.tree.map(
+                lambda a: a.astype(cdt)
+                if jnp.issubdtype(a.dtype, jnp.floating) else a, p)
+            return loss_fn(model, pc, batch, remat=remat)
+        return jax.value_and_grad(loss_of, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatch and tcfg.microbatch > 0:
+            def split(x):
+                n = x.shape[0] // tcfg.microbatch
+                y = x.reshape((n, tcfg.microbatch) + x.shape[1:])
+                if data_axes is not None:
+                    from jax.sharding import PartitionSpec as P
+                    spec = P(None, data_axes, *([None] * (y.ndim - 2)))
+                    y = jax.lax.with_sharding_constraint(y, spec)
+                return y
+            micro = jax.tree.map(split, batch)
+            loss, grads = gradlib.accumulate(
+                lg, params, micro, grad_shardings, prepin=tcfg.grad_prepin,
+                grad_dtype=(None if tcfg.grad_dtype == "float32"
+                            else tcfg.grad_dtype))
+        else:
+            (loss, _), grads = lg(params, batch)
+        if tcfg.grad_compression == "int8_ef":
+            ef = opt_state["ef"]
+            grads, new_ef = gradlib.compress_int8(grads, ef)
+        params, inner, metrics = adamw.update(
+            ocfg, grads, opt_state["adam"], params)
+        new_state = {"adam": inner}
+        if tcfg.grad_compression == "int8_ef":
+            new_state["ef"] = new_ef
+        metrics = dict(metrics, loss=loss)
+        return params, new_state, metrics
+
+    return train_step
+
+
+def init_opt_state(tcfg: TrainConfig, params):
+    state = {"adam": adamw.init(params)}
+    if tcfg.grad_compression == "int8_ef":
+        state["ef"] = gradlib.ef_init(params)
+    return state

@@ -1,0 +1,148 @@
+"""Property + exhaustive tests for the EN-T / MBE encodings (paper §3.2-3.3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import encoding as enc
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+class TestENTUnsigned:
+    def test_exhaustive_int8_roundtrip(self):
+        """Every unsigned 8-bit value decodes back exactly (2^8 cases)."""
+        x = jnp.arange(256, dtype=jnp.int32)
+        w, carry = enc.ent_encode_unsigned(x, 8)
+        assert _np(enc.ent_decode_unsigned(w, carry)).tolist() == list(range(256))
+
+    def test_digit_set(self):
+        x = jnp.arange(256, dtype=jnp.int32)
+        w, carry = enc.ent_encode_unsigned(x, 8)
+        assert set(_np(w).ravel().tolist()) <= {-1, 0, 1, 2}
+        assert set(_np(carry).ravel().tolist()) <= {0, 1}
+
+    def test_paper_example_78(self):
+        """Paper §3.3.1: Encode(78) = {0, 1, 1, -1, 2} (sign, then MSB-first)."""
+        sign, w, carry = enc.ent_encode_signed(jnp.int32(78), 8)
+        assert int(sign) == 0
+        assert _np(w)[::-1].tolist() == [1, 1, -1, 2]  # MSB-first digits
+        assert int(carry) == 0
+        # 78 = 4^3 + 4^2 - 4 + 2
+        assert 64 + 16 - 4 + 2 == 78
+
+    def test_255_needs_carry(self):
+        w, carry = enc.ent_encode_unsigned(jnp.int32(255), 8)
+        assert int(carry) == 1
+        assert _np(w).tolist() == [-1, 0, 0, 0]  # 255 = -1 + 256
+
+    @given(st.integers(0, 2**16 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_roundtrip_16bit(self, x):
+        w, carry = enc.ent_encode_unsigned(jnp.int32(x), 16)
+        assert int(enc.ent_decode_unsigned(w, carry)) == x
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_roundtrip_32bit(self, x):
+        w, carry = enc.ent_encode_unsigned(jnp.int32(x), 32)
+        assert int(enc.ent_decode_unsigned(w, carry)) == x
+
+    def test_matches_numpy_oracle(self):
+        rng = np.random.default_rng(0)
+        x = rng.integers(0, 2**16, size=(64,), dtype=np.int64)
+        wj, cj = enc.ent_encode_unsigned(jnp.asarray(x, jnp.int32), 16)
+        wn, cn = enc.np_ent_encode_unsigned(x, 16)
+        np.testing.assert_array_equal(_np(wj), wn)
+        np.testing.assert_array_equal(_np(cj), cn)
+
+
+class TestENTBitLevel:
+    """The paper's Eq. 8/17 gate recurrence must equal the arithmetic spec."""
+
+    def test_bitlevel_equals_arithmetic_exhaustive_int8(self):
+        x = jnp.arange(256, dtype=jnp.int32)
+        w, carry = enc.ent_encode_unsigned(x, 8)
+        enc_bits, carry_bits = enc.ent_encode_bitlevel(x, 8)
+        np.testing.assert_array_equal(_np(enc.pack_ent_digits(w)), _np(enc_bits))
+        np.testing.assert_array_equal(_np(carry), _np(carry_bits))
+
+    @given(st.integers(0, 2**20 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_bitlevel_equals_arithmetic_20bit(self, x):
+        w, carry = enc.ent_encode_unsigned(jnp.int32(x), 20)
+        enc_bits, carry_bits = enc.ent_encode_bitlevel(jnp.int32(x), 20)
+        np.testing.assert_array_equal(_np(enc.pack_ent_digits(w)), _np(enc_bits))
+        assert int(carry) == int(carry_bits)
+
+    def test_pack_unpack_inverse(self):
+        w = jnp.asarray([-1, 0, 1, 2], jnp.int32)
+        np.testing.assert_array_equal(_np(enc.unpack_ent_digits(enc.pack_ent_digits(w))), _np(w))
+
+
+class TestENTSigned:
+    def test_exhaustive_int8(self):
+        x = jnp.arange(-128, 128, dtype=jnp.int32)
+        sign, w, carry = enc.ent_encode_signed(x, 8)
+        np.testing.assert_array_equal(_np(enc.ent_decode_signed(sign, w, carry)), _np(x))
+
+    def test_int8_never_carries(self):
+        """|int8| <= 128 < 192 => carry-out always 0 (kernel relies on this)."""
+        x = jnp.arange(-128, 128, dtype=jnp.int32)
+        _, _, carry = enc.ent_encode_signed(x, 8)
+        assert int(jnp.max(carry)) == 0
+
+    @given(st.integers(-(2**15), 2**15 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_roundtrip_int16(self, x):
+        sign, w, carry = enc.ent_encode_signed(jnp.int32(x), 16)
+        assert int(enc.ent_decode_signed(sign, w, carry)) == x
+
+
+class TestMBE:
+    def test_exhaustive_int8(self):
+        x = jnp.arange(-128, 128, dtype=jnp.int32)
+        m = enc.mbe_encode(x, 8)
+        np.testing.assert_array_equal(_np(enc.mbe_decode(m)), _np(x))
+        assert set(_np(m).ravel().tolist()) <= {-2, -1, 0, 1, 2}
+
+    @given(st.integers(-(2**15), 2**15 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_roundtrip_int16(self, x):
+        assert int(enc.mbe_decode(enc.mbe_encode(jnp.int32(x), 16))) == x
+
+    def test_control_lines_consistent(self):
+        x = jnp.arange(-128, 128, dtype=jnp.int32)
+        m = enc.mbe_encode(x, 8)
+        neg, se, ce = enc.mbe_control_lines(x, 8)
+        np.testing.assert_array_equal(_np(neg), _np((m < 0).astype(jnp.int32)))
+        np.testing.assert_array_equal(_np(se), _np((jnp.abs(m) == 2).astype(jnp.int32)))
+        np.testing.assert_array_equal(_np(ce), _np((m != 0).astype(jnp.int32)))
+
+
+class TestWidthBookkeeping:
+    """Table 1 right columns: encoder counts and encoded widths."""
+
+    @pytest.mark.parametrize(
+        "n,mbe_n,ours_n,mbe_w,ours_w",
+        [
+            (8, 4, 3, 12, 9),
+            (10, 5, 4, 15, 11),
+            (12, 6, 5, 18, 13),
+            (14, 7, 6, 21, 15),
+            (16, 8, 7, 24, 17),
+            (18, 9, 8, 27, 19),
+            (20, 10, 9, 30, 21),
+            (24, 12, 11, 36, 25),
+            (32, 16, 15, 48, 33),
+        ],
+    )
+    def test_paper_table1_counts(self, n, mbe_n, ours_n, mbe_w, ours_w):
+        assert enc.mbe_num_encoders(n) == mbe_n
+        assert enc.ent_num_encoders(n) == ours_n
+        assert enc.mbe_encoded_bits(n) == mbe_w
+        assert enc.ent_encoded_bits(n) == ours_w

@@ -1,0 +1,133 @@
+"""Paper-validation tests for the silicon cost model (Figs 6-7, Table 1)."""
+
+import pytest
+
+from repro.core import gates, hwmodel as hw
+
+
+class TestStructure:
+    def test_encoder_counts_match_paper(self):
+        """§4.4: a 32x32 planar array saves 992 encoders; two 8^3 cubes
+        need 128 encoders and save 896."""
+        planar = hw.TCUConfig("2d_matrix", 32, "ent_ours")
+        assert hw.num_edge_encoder_lanes(planar) == 32
+        assert hw.encoders_saved(planar) == 992
+        cube = hw.TCUConfig("cube_3d", 8, "ent_ours")
+        assert hw.num_edge_encoder_lanes(cube) == 64
+        assert hw.encoders_saved(cube) == 448  # x2 cubes = 896
+        assert hw.num_multipliers(cube) == 512
+
+    def test_gops(self):
+        assert hw.gops(hw.TCUConfig("systolic_os", 32)) == pytest.approx(1024)
+        assert hw.gops(hw.TCUConfig("systolic_os", 16)) == pytest.approx(256)
+        assert hw.gops(hw.TCUConfig("cube_3d", 8)) == pytest.approx(512)
+
+    def test_encoded_path_widths(self):
+        assert hw.bits_a(hw.TCUConfig("systolic_os", 32, "baseline")) == 8
+        assert hw.bits_a(hw.TCUConfig("systolic_os", 32, "ent_mbe")) == 12
+        assert hw.bits_a(hw.TCUConfig("systolic_os", 32, "ent_ours")) == 9
+
+    def test_baseline_has_no_edge_encoders(self):
+        for arch in hw.ARCHS:
+            cfg = hw.TCUConfig(arch, 16, "baseline")
+            assert hw.num_edge_encoder_lanes(cfg) == 0
+
+    def test_encoder_delay_model(self):
+        """Table 1: MBE flat 0.23ns; ours grows ~0.09ns/stage (1.41 @ 32b)."""
+        assert gates.MBE_ENCODER_DELAY == 0.23
+        assert gates.ent_encoder_delay(3) == pytest.approx(0.36, abs=0.03)
+        assert gates.ent_encoder_delay(15) == pytest.approx(1.41, abs=0.05)
+
+    def test_encoder_group_costs_match_table1(self):
+        """Group rows = N x single-encoder cost."""
+        assert 4 * gates.MBE_ENCODER_AREA == pytest.approx(28.22, abs=0.1)
+        assert 3 * gates.ENT_ENCODER_AREA == pytest.approx(25.93, abs=0.1)
+        assert 15 * gates.ENT_ENCODER_AREA == pytest.approx(129.65, abs=0.5)
+        assert 16 * gates.MBE_ENCODER_AREA == pytest.approx(112.90, abs=0.5)
+
+
+class TestPaperHeadlines:
+    """Fig 7: average improvements across the 5 microarchitectures."""
+
+    @pytest.mark.parametrize(
+        "scale,paper_area,paper_energy",
+        [("256GOPS", 0.087, 0.130), ("1TOPS", 0.122, 0.175), ("4TOPS", 0.110, 0.155)],
+    )
+    def test_scale_averages(self, scale, paper_area, paper_energy):
+        avg = hw.scale_average(scale)
+        assert avg["area_eff"] == pytest.approx(paper_area, abs=0.02)
+        assert avg["energy_eff"] == pytest.approx(paper_energy, abs=0.025)
+
+    def test_1d2d_at_1tops_matches_paper(self):
+        """Paper: 1D/2D Array +20.2% area / +20.5% energy at 1 TOPS."""
+        imp = hw.improvement("1d2d_array", 32)
+        assert imp["area_eff"] == pytest.approx(0.202, abs=0.01)
+        assert imp["energy_eff"] == pytest.approx(0.205, abs=0.01)
+
+    def test_1d2d_is_best_fabric(self):
+        imps = {a: hw.improvement(a, 8 if a == "cube_3d" else 32) for a in hw.ARCHS}
+        best_area = max(imps, key=lambda a: imps[a]["area_eff"])
+        assert best_area == "1d2d_array"
+
+    def test_cube_gains_least_energy(self):
+        imps = {a: hw.improvement(a, 8 if a == "cube_3d" else 32)["energy_eff"]
+                for a in hw.ARCHS}
+        assert min(imps, key=imps.get) == "cube_3d"
+
+    def test_scale_hump(self):
+        """Improvement rises 256G -> 1T and falls 1T -> 4T (both metrics)."""
+        a256 = hw.scale_average("256GOPS")
+        a1t = hw.scale_average("1TOPS")
+        a4t = hw.scale_average("4TOPS")
+        for k in ("area_eff", "energy_eff"):
+            assert a256[k] < a1t[k]
+            assert a4t[k] < a1t[k]
+
+
+class TestMBEVariant:
+    """§4.3: externalized MBE helps broadcast fabrics but its 1.5x encoded
+    width costs registers on pipelined fabrics ('may even increase area')."""
+
+    def test_mbe_area_penalty_on_pipelined_fabrics(self):
+        for arch in ("systolic_os", "systolic_ws", "cube_3d"):
+            size = 8 if arch == "cube_3d" else 32
+            assert hw.improvement(arch, size, "ent_mbe")["area_eff"] < 0.01
+
+    def test_mbe_roughly_neutral_area_on_broadcast(self):
+        for arch in ("2d_matrix", "1d2d_array"):
+            imp = hw.improvement(arch, 32, "ent_mbe")["area_eff"]
+            assert -0.03 < imp < 0.05
+
+    def test_ours_beats_mbe_everywhere(self):
+        for arch in hw.ARCHS:
+            size = 8 if arch == "cube_3d" else 32
+            ours = hw.improvement(arch, size, "ent_ours")
+            mbe = hw.improvement(arch, size, "ent_mbe")
+            assert ours["area_eff"] > mbe["area_eff"]
+            assert ours["energy_eff"] > mbe["energy_eff"]
+
+
+class TestSanity:
+    def test_breakdowns_positive(self):
+        for arch in hw.ARCHS:
+            for variant in hw.VARIANTS:
+                cfg = hw.TCUConfig(arch, 16, variant)
+                area, power = hw.raw_breakdown(cfg)
+                assert all(v >= 0 for v in area.values())
+                assert all(v >= 0 for v in power.values())
+                assert hw.area_um2(cfg) > 0
+                assert hw.power_uw(cfg) > 0
+
+    def test_ent_smaller_than_baseline(self):
+        for arch in hw.ARCHS:
+            size = 8 if arch == "cube_3d" else 32
+            base = hw.TCUConfig(arch, size, "baseline")
+            ent = hw.TCUConfig(arch, size, "ent_ours")
+            assert hw.area_um2(ent) < hw.area_um2(base)
+            assert hw.power_uw(ent) < hw.power_uw(base)
+
+    def test_invalid_configs_raise(self):
+        with pytest.raises(ValueError):
+            hw.TCUConfig("hexagon", 32)
+        with pytest.raises(ValueError):
+            hw.TCUConfig("2d_matrix", 32, "ent_base64")

@@ -1,0 +1,197 @@
+"""Per-kernel interpret-mode validation against pure-jnp oracles.
+
+Every Pallas kernel is swept over shapes/dtypes and asserted allclose
+(bit-exact where integer) against its ref.py oracle, per the repo policy.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.multiplier import ent_digit_planes
+from repro.kernels.ent_matmul.ent_matmul import ent_matmul
+from repro.kernels.ent_matmul.ref import ent_matmul_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.int8_matmul.int8_matmul import int8_matmul
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+RNG = np.random.default_rng(42)
+
+
+def _qdata(m, k, n):
+    x = jnp.asarray(RNG.integers(-128, 128, (m, k), dtype=np.int8))
+    w = jnp.asarray(RNG.integers(-128, 128, (k, n), dtype=np.int8))
+    sx = jnp.asarray(RNG.random((m, 1), dtype=np.float32) * 0.1 + 1e-3)
+    sw = jnp.asarray(RNG.random((1, n), dtype=np.float32) * 0.1 + 1e-3)
+    return x, w, sx, sw
+
+
+class TestInt8Matmul:
+    @pytest.mark.parametrize(
+        "m,k,n,bm,bn,bk",
+        [
+            (128, 256, 128, 128, 128, 128),
+            (256, 512, 384, 128, 128, 256),
+            (64, 128, 64, 64, 64, 128),
+            (128, 1024, 256, 128, 128, 512),
+            (8, 128, 128, 8, 128, 128),     # decode-like skinny M
+        ],
+    )
+    def test_shape_sweep(self, m, k, n, bm, bn, bk):
+        x, w, sx, sw = _qdata(m, k, n)
+        got = int8_matmul(x, w, sx, sw, block_m=bm, block_n=bn, block_k=bk,
+                          out_dtype=jnp.float32, interpret=True)
+        want = int8_matmul_ref(x, w, sx, sw, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    @pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+    def test_out_dtypes(self, out_dtype):
+        x, w, sx, sw = _qdata(128, 256, 128)
+        got = int8_matmul(x, w, sx, sw, out_dtype=out_dtype, interpret=True)
+        want = int8_matmul_ref(x, w, sx, sw, out_dtype=out_dtype)
+        assert got.dtype == out_dtype
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=1e-2)
+
+    def test_int32_accumulation_no_overflow_path(self):
+        """Extremes: all +/-128 activations x +/-128 weights at K=512."""
+        x = jnp.full((128, 512), -128, jnp.int8)
+        w = jnp.full((512, 128), -128, jnp.int8)
+        sx = jnp.ones((128, 1), jnp.float32)
+        sw = jnp.ones((1, 128), jnp.float32)
+        got = int8_matmul(x, w, sx, sw, out_dtype=jnp.float32, interpret=True)
+        assert np.all(np.asarray(got) == 128 * 128 * 512)
+
+
+class TestEntMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n,bk",
+        [(128, 256, 128, 128), (128, 512, 256, 256), (64, 128, 64, 128),
+         (8, 256, 128, 256)],
+    )
+    def test_bit_exact_vs_plain_int_matmul(self, m, k, n, bk):
+        """The EN-T digit-plane kernel must be BIT-EXACT vs int32 matmul
+        of the decoded weights — the encoding changes nothing numerically."""
+        x, w, sx, sw = _qdata(m, k, n)
+        planes = ent_digit_planes(w)
+        got = ent_matmul(x, planes, sx, sw, block_m=min(128, m), block_n=min(128, n),
+                         block_k=bk, interpret=True)
+        plain = (np.asarray(x, np.int32) @ np.asarray(w, np.int32)).astype(np.float32)
+        want = plain * np.asarray(sx) * np.asarray(sw)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+    def test_matches_ref(self):
+        x, w, sx, sw = _qdata(128, 256, 128)
+        planes = ent_digit_planes(w)
+        got = ent_matmul(x, planes, sx, sw, interpret=True, block_k=256)
+        want = ent_matmul_ref(x, planes, sx, sw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_weights(self, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.integers(-128, 128, (64, 128), dtype=np.int8))
+        w = jnp.asarray(rng.integers(-128, 128, (128, 64), dtype=np.int8))
+        sx = jnp.ones((64, 1), jnp.float32)
+        sw = jnp.ones((1, 64), jnp.float32)
+        got = ent_matmul(x, ent_digit_planes(w), sx, sw, interpret=True,
+                         block_m=64, block_n=64, block_k=128)
+        want = np.asarray(x, np.int32) @ np.asarray(w, np.int32)
+        np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+class TestFlashAttention:
+    def _data(self, b, hq, hkv, sq, skv, d, dtype=np.float32):
+        q = jnp.asarray(RNG.normal(size=(b, hq, sq, d)).astype(dtype))
+        k = jnp.asarray(RNG.normal(size=(b, hkv, skv, d)).astype(dtype))
+        v = jnp.asarray(RNG.normal(size=(b, hkv, skv, d)).astype(dtype))
+        return q, k, v
+
+    @pytest.mark.parametrize(
+        "b,hq,hkv,s,d",
+        [(1, 2, 2, 128, 64), (2, 4, 2, 256, 64), (1, 8, 1, 256, 128),
+         (2, 2, 2, 512, 32)],
+    )
+    def test_causal_sweep(self, b, hq, hkv, s, d):
+        q, k, v = self._data(b, hq, hkv, s, s, d)
+        got = flash_attention(q, k, v, causal=True, interpret=True,
+                              block_q=64, block_kv=64)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_sliding_window_matches_ref(self):
+        q, k, v = self._data(1, 4, 2, 256, 256, 64)
+        for w in (32, 64, 128):
+            got = flash_attention(q, k, v, causal=True, window=w,
+                                  interpret=True, block_q=64, block_kv=64)
+            want = attention_ref(q, k, v, causal=True, window=w)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=2e-5, rtol=1e-4)
+
+    def test_decode_suffix_query(self):
+        """Sq=1 against a long KV stream (the serving decode path)."""
+        q, k, v = self._data(2, 4, 4, 1, 384, 64)
+        got = flash_attention(q, k, v, causal=True, interpret=True,
+                              block_q=1, block_kv=128)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_bf16(self):
+        q, k, v = self._data(1, 2, 2, 128, 128, 64)
+        q, k, v = (t.astype(jnp.bfloat16) for t in (q, k, v))
+        got = flash_attention(q, k, v, causal=True, interpret=True,
+                              block_q=64, block_kv=64)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), atol=2e-2)
+
+    def test_nonsquare_blocks(self):
+        q, k, v = self._data(1, 2, 2, 256, 256, 64)
+        got = flash_attention(q, k, v, causal=True, interpret=True,
+                              block_q=128, block_kv=32)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+
+class TestSSDScan:
+    def _data(self, b, l, h, p, g, n):
+        x = jnp.asarray(RNG.normal(size=(b, l, h, p)).astype(np.float32))
+        dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(b, l, h)).astype(np.float32))
+        a = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(h,)).astype(np.float32))
+        bm = jnp.asarray(RNG.normal(size=(b, l, g, n)).astype(np.float32))
+        cm = jnp.asarray(RNG.normal(size=(b, l, g, n)).astype(np.float32))
+        return x, dt, a, bm, cm
+
+    @pytest.mark.parametrize(
+        "b,l,h,p,g,n,chunk",
+        [(1, 128, 2, 16, 1, 16, 64), (2, 256, 4, 32, 2, 16, 64),
+         (1, 256, 4, 64, 1, 32, 128), (1, 512, 2, 32, 2, 64, 128)],
+    )
+    def test_shape_sweep(self, b, l, h, p, g, n, chunk):
+        x, dt, a, bm, cm = self._data(b, l, h, p, g, n)
+        got = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+        want = ssd_scan_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-3)
+
+    def test_single_chunk_equals_multi_chunk(self):
+        x, dt, a, bm, cm = self._data(1, 128, 2, 16, 1, 16)
+        one = ssd_scan(x, dt, a, bm, cm, chunk=128, interpret=True)
+        many = ssd_scan(x, dt, a, bm, cm, chunk=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(one), np.asarray(many),
+                                   atol=1e-4, rtol=1e-3)
+
+    def test_state_decay_monotone(self):
+        """With x=0 everywhere the output is exactly 0 (no state leaks)."""
+        x, dt, a, bm, cm = self._data(1, 128, 2, 16, 1, 16)
+        got = ssd_scan(jnp.zeros_like(x), dt, a, bm, cm, chunk=64, interpret=True)
+        assert np.all(np.asarray(got) == 0)

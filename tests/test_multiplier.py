@@ -1,0 +1,78 @@
+"""Bit-exactness of the multiplier models and digit-plane matmul."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import multiplier as mult
+
+
+class TestScalarMultipliers:
+    def test_exhaustive_int8_ent(self):
+        """All 256x256 int8 products, bit-exact."""
+        a = jnp.arange(-128, 128, dtype=jnp.int32)[:, None]
+        b = jnp.arange(-128, 128, dtype=jnp.int32)[None, :]
+        prod = mult.ent_multiply(jnp.broadcast_to(a, (256, 256)), jnp.broadcast_to(b, (256, 256)), 8)
+        np.testing.assert_array_equal(np.asarray(prod), np.asarray(a) * np.asarray(b))
+
+    def test_exhaustive_int8_mbe(self):
+        a = jnp.arange(-128, 128, dtype=jnp.int32)[:, None]
+        b = jnp.arange(-128, 128, dtype=jnp.int32)[None, :]
+        prod = mult.mbe_multiply(jnp.broadcast_to(a, (256, 256)), jnp.broadcast_to(b, (256, 256)), 8)
+        np.testing.assert_array_equal(np.asarray(prod), np.asarray(a) * np.asarray(b))
+
+    @given(st.integers(-(2**15), 2**15 - 1), st.integers(-(2**15), 2**15 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_int16_products(self, a, b):
+        assert int(mult.ent_multiply(jnp.int32(a), jnp.int32(b), 16)) == a * b
+        assert int(mult.mbe_multiply(jnp.int32(a), jnp.int32(b), 16)) == a * b
+
+    def test_partial_product_row_counts(self):
+        """MBE: n/2 rows; EN-T: n/2 + 1 (carry row, zero for int8)."""
+        rows_mbe = mult.mbe_partial_products(jnp.int32(77), jnp.int32(-5), 8)
+        rows_ent = mult.ent_partial_products(jnp.int32(77), jnp.int32(-5), 8)
+        assert rows_mbe.shape[-1] == 4
+        assert rows_ent.shape[-1] == 5
+        assert int(rows_ent[..., -1]) == 0  # int8 carry row is dead
+
+
+class TestDigitPlanes:
+    def test_planes_reconstruct_weight(self):
+        rng = np.random.default_rng(1)
+        w = rng.integers(-128, 128, size=(64, 48), dtype=np.int8)
+        planes = mult.ent_digit_planes(jnp.asarray(w))
+        assert planes.shape == (4, 64, 48)
+        assert planes.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(mult.planes_to_weight(planes)), w.astype(np.int32))
+
+    def test_plane_values_in_digit_set(self):
+        w = jnp.asarray(np.arange(-128, 128, dtype=np.int8).reshape(16, 16))
+        planes = mult.ent_digit_planes(w)
+        assert set(np.asarray(planes).ravel().tolist()) <= {-2, -1, 0, 1, 2}
+
+    def test_plane_matmul_bit_exact(self):
+        rng = np.random.default_rng(2)
+        x = rng.integers(-128, 128, size=(32, 64), dtype=np.int8)
+        w = rng.integers(-128, 128, size=(64, 48), dtype=np.int8)
+        planes = mult.ent_digit_planes(jnp.asarray(w))
+        got = mult.ent_plane_matmul(jnp.asarray(x), planes)
+        want = x.astype(np.int32) @ w.astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_plane_matmul_matches_numpy_oracle(self):
+        rng = np.random.default_rng(3)
+        x = rng.integers(-128, 128, size=(8, 16), dtype=np.int8)
+        w = rng.integers(-128, 128, size=(16, 24), dtype=np.int8)
+        got = mult.ent_plane_matmul(jnp.asarray(x), mult.ent_digit_planes(jnp.asarray(w)))
+        np.testing.assert_array_equal(np.asarray(got), mult.np_ent_plane_matmul(x, w))
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_plane_matmul_random_shapes(self, seed):
+        rng = np.random.default_rng(seed)
+        m, k, n = (int(rng.integers(1, 33)) for _ in range(3))
+        x = rng.integers(-128, 128, size=(m, k), dtype=np.int8)
+        w = rng.integers(-128, 128, size=(k, n), dtype=np.int8)
+        got = mult.ent_plane_matmul(jnp.asarray(x), mult.ent_digit_planes(jnp.asarray(w)))
+        np.testing.assert_array_equal(np.asarray(got), x.astype(np.int32) @ w.astype(np.int32))

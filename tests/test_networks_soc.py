@@ -1,0 +1,93 @@
+"""CNN layer tables vs literature + SoC model vs paper Figs 9-12."""
+
+import pytest
+
+from repro.core import networks as nw
+from repro.core import soc
+
+
+class TestNetworkTables:
+    """MAC/param totals vs published values (224x224; inception 299)."""
+
+    @pytest.mark.parametrize(
+        "net,gmacs,mparams",
+        [
+            ("vgg13", 11.31, 133.0),
+            ("vgg19", 19.63, 143.7),
+            ("resnet34", 3.66, 21.8),
+            ("resnet50", 4.09, 25.5),
+            ("resnet101", 7.80, 44.4),
+            ("densenet121", 2.83, 7.9),
+            ("densenet161", 7.73, 28.5),
+            ("inception_v3", 5.71, 23.8),
+        ],
+    )
+    def test_totals_vs_literature(self, net, gmacs, mparams):
+        assert nw.total_macs(net) / 1e9 == pytest.approx(gmacs, rel=0.03)
+        assert nw.total_weight_bytes(net) / 1e6 == pytest.approx(mparams, rel=0.04)
+
+    def test_gemm_dims_consistent(self):
+        for net in nw.NETWORKS:
+            for lyr in nw.network(net):
+                assert lyr.macs == lyr.m * lyr.kdim * lyr.n
+                assert lyr.m > 0 and lyr.kdim > 0 and lyr.n > 0
+
+
+class TestSoCModel:
+    def test_compute_engine_fraction_band(self):
+        """Fig 9: compute engines are 80-94% of on-chip energy."""
+        for net in nw.NETWORKS:
+            for arch in ("2d_matrix", "systolic_os", "cube_3d"):
+                r = soc.run_inference(net, soc.SoCConfig(arch, "baseline"))
+                assert 0.78 <= r.compute_engine_fraction <= 0.95, (net, arch)
+
+    def test_densenet_most_memory_bound(self):
+        """Fig 9(c): lightweight nets have the highest memory fraction."""
+        fr = {
+            net: soc.run_inference(net, soc.SoCConfig("systolic_os")).compute_engine_fraction
+            for net in ("densenet121", "resnet50", "vgg19")
+        }
+        assert fr["densenet121"] < fr["resnet50"]
+        assert fr["densenet121"] < fr["vgg19"]
+
+    @pytest.mark.parametrize(
+        "arch,lo,hi,tol",
+        [
+            # paper Fig 11 bands (percent); tol covers the documented
+            # residual of the calibrated model (EXPERIMENTS.md)
+            ("2d_matrix", 15.1, 15.9, 2.2),
+            ("systolic_os", 11.3, 12.8, 1.0),
+            ("systolic_ws", 10.2, 11.7, 1.0),
+            ("1d2d_array", 14.0, 16.0, 2.8),
+            ("cube_3d", 5.0, 6.0, 1.0),
+        ],
+    )
+    def test_energy_reduction_bands(self, arch, lo, hi, tol):
+        for net in nw.NETWORKS:
+            red = soc.energy_reduction(net, arch) * 100
+            assert lo - tol <= red <= hi + tol, (arch, net, red)
+
+    def test_cube_gains_least(self):
+        """Fig 11: 3D Cube benefits least (more encoders per GOPS)."""
+        reds = {
+            arch: soc.energy_reduction("resnet50", arch)
+            for arch in ("2d_matrix", "systolic_os", "systolic_ws", "1d2d_array", "cube_3d")
+        }
+        assert min(reds, key=reds.get) == "cube_3d"
+
+    def test_soc_area_efficiency_small_but_positive(self):
+        """Fig 12: SoC-level area benefit is positive but modest (SRAM etc
+        dilute the TCU saving)."""
+        for arch in ("2d_matrix", "systolic_os", "1d2d_array", "cube_3d"):
+            gain = soc.soc_area_efficiency_gain(arch)
+            assert 0.0 < gain < 0.08
+
+    def test_utilization_sane(self):
+        for net in nw.NETWORKS:
+            r = soc.run_inference(net, soc.SoCConfig("systolic_os"))
+            assert 0.4 < r.utilization <= 1.0
+
+    def test_encoder_bank_energy_negligible(self):
+        """Table 2: 32 encoders ~0.9 mW — must be <0.5% of SoC energy."""
+        r = soc.run_inference("resnet50", soc.SoCConfig("systolic_os", "ent_ours"))
+        assert r.energy_j["encoders"] / r.total_j < 5e-3

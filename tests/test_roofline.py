@@ -1,0 +1,69 @@
+"""Roofline derivation unit tests: HLO parsing, ring models, corrections."""
+
+import pytest
+
+from repro.core import roofline as rl
+
+HLO = """
+HloModule jit_step
+  %ag = f32[128,4096]{1,0} all-gather(%convert_fusion.1), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = bf16[512,512]{1,0} all-reduce(%x), replica_groups=[1,256]<=[256], to_apply=%add
+  %rs = f32[64,64]{1,0} reduce-scatter(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %aa = f32[16,16]{1,0} all-to-all(%w), replica_groups=[32,8]<=[256]
+  %ard = f32[8,8]{1,0} all-reduce-done(%ar2)
+"""
+
+
+class TestCollectiveParsing:
+    def test_bytes_and_ring_models(self):
+        out = rl.collective_bytes(HLO, 256)
+        # all-gather: result 128*4096*4 = 2.097e6; CPU-convert -> halved;
+        # ring: *15/16
+        assert out["all-gather"] == pytest.approx(
+            128 * 4096 * 4 * 0.5 * 15 / 16, rel=1e-6)
+        # all-reduce: 2R(n-1)/n with n=256
+        assert out["all-reduce"] == pytest.approx(
+            2 * 512 * 512 * 2 * 255 / 256, rel=1e-6)
+        # reduce-scatter: R*(n-1), group literal of 4
+        assert out["reduce-scatter"] == pytest.approx(64 * 64 * 4 * 3, rel=1e-6)
+        assert out["collective-permute"] == pytest.approx(32 * 32 * 2)
+        assert out["all-to-all"] == pytest.approx(16 * 16 * 4 * 7 / 8, rel=1e-6)
+        assert out["counts"]["all-reduce"] == 1  # -done line ignored
+
+    def test_group_size_formats(self):
+        assert rl._group_size("replica_groups=[16,16]<=[256]", 1) == 16
+        assert rl._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 1) == 4
+        assert rl._group_size("no groups here", 99) == 99
+
+
+class TestRooflineTerms:
+    def test_bottleneck_and_fraction(self):
+        r = rl.Roofline(flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=0,
+                        coll_detail={}, peak_memory_bytes=0)
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.memory_s == pytest.approx(2.0)
+        assert r.bottleneck == "memory"
+        assert r.roofline_fraction() == pytest.approx(0.5)
+
+    def test_perfect_overlap_total(self):
+        r = rl.Roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=50e9 * 3,
+                        coll_detail={}, peak_memory_bytes=0)
+        assert r.total_s == pytest.approx(3.0)
+        assert r.bottleneck == "collective"
+
+    def test_model_flops(self):
+        from repro.configs import SHAPES, get_config
+        cfg = get_config("qwen2.5-3b")
+        f_train = rl.model_flops(cfg, SHAPES["train_4k"])
+        f_dec = rl.model_flops(cfg, SHAPES["decode_32k"])
+        n = cfg.active_param_count()
+        assert f_train == pytest.approx(6 * n * 256 * 4096)
+        assert f_dec == pytest.approx(2 * n * 128)
+
+
+class TestCpuInflation:
+    def test_detects_large_f32_converts(self):
+        text = (" %c = f32[100000,1000]{1,0} convert(%p)\n"
+                " %small = f32[10,10]{1,0} convert(%q)\n")
+        assert rl.cpu_bf16_inflation_bytes(text) == pytest.approx(4e8)

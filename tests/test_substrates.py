@@ -1,0 +1,244 @@
+"""Optimizer / schedules / data / checkpoint / elastic / grad-compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import OptimConfig
+from repro.data.pipeline import Prefetcher, SyntheticSource, TokenStream
+from repro.optim import adamw, grad as gradlib
+from repro.optim.schedule import lr_at
+from repro.runtime.elastic import (HealthMonitor, StragglerPolicy, plan_remesh)
+
+
+class TestAdamW:
+    def _quad(self):
+        params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+        loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+        return params, loss
+
+    def test_converges_on_quadratic(self):
+        cfg = OptimConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=300, schedule="linear", grad_clip=0)
+        params, loss = self._quad()
+        state = adamw.init(params)
+        for _ in range(300):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw.update(cfg, g, state, params)
+        assert float(loss(params)) < 1e-3
+
+    def test_weight_decay_shrinks(self):
+        cfg = OptimConfig(lr=0.05, weight_decay=0.5, warmup_steps=0,
+                          total_steps=100, schedule="linear", grad_clip=0)
+        params = {"w": jnp.ones((4,))}
+        state = adamw.init(params)
+        zeros = {"w": jnp.zeros((4,))}
+        for _ in range(50):
+            params, state, _ = adamw.update(cfg, zeros, state, params)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 1.0
+
+    def test_grad_clip(self):
+        g = {"a": jnp.full((100,), 10.0)}
+        clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+        assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+        assert float(norm) == pytest.approx(100.0, rel=1e-5)
+
+
+class TestSchedules:
+    def test_warmup(self):
+        cfg = OptimConfig(lr=1.0, warmup_steps=100, total_steps=1000)
+        assert float(lr_at(cfg, 0)) == 0.0
+        assert float(lr_at(cfg, 50)) == pytest.approx(0.5, rel=0.02)
+
+    def test_wsd_stable_then_decay(self):
+        """MiniCPM WSD: flat after warmup, exponential tail to 10%."""
+        cfg = OptimConfig(lr=1.0, warmup_steps=10, total_steps=1000,
+                          schedule="wsd", wsd_decay_frac=0.1)
+        stable = [float(lr_at(cfg, s)) for s in (100, 500, 880)]
+        assert all(v == pytest.approx(1.0, rel=1e-3) for v in stable)
+        assert float(lr_at(cfg, 1000)) == pytest.approx(0.1, rel=0.02)
+        assert float(lr_at(cfg, 950)) < 1.0
+
+    def test_cosine_monotone_decay(self):
+        cfg = OptimConfig(lr=1.0, warmup_steps=0, total_steps=100,
+                          schedule="cosine")
+        vals = [float(lr_at(cfg, s)) for s in range(0, 101, 10)]
+        assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+
+
+class TestGradCompression:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_error_feedback_preserves_sum(self, seed):
+        """EF property: sum of dequantized grads + final residual equals
+        the sum of true grads (no systematic bias accumulation)."""
+        rng = np.random.default_rng(seed)
+        g_true = [jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+                  for _ in range(5)]
+        params = {"w": jnp.zeros((32,))}
+        ef = gradlib.ef_init(params)
+        total_deq = jnp.zeros((32,))
+        total_true = jnp.zeros((32,))
+        for g in g_true:
+            deq, ef = gradlib.compress_int8({"w": g}, ef)
+            total_deq += deq["w"]
+            total_true += g
+        np.testing.assert_allclose(
+            np.asarray(total_deq + ef["w"]), np.asarray(total_true),
+            rtol=1e-4, atol=1e-4)
+
+    def test_compression_is_int8_resolution(self):
+        g = {"w": jnp.linspace(-1, 1, 256)}
+        deq, ef = gradlib.compress_int8(g, gradlib.ef_init(g))
+        err = float(jnp.max(jnp.abs(deq["w"] - g["w"])))
+        assert err <= 1.0 / 127.0 + 1e-6
+
+
+class TestAccumulate:
+    def test_matches_full_batch(self):
+        w = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0]])}
+        xs = jnp.asarray(np.random.default_rng(0).normal(size=(8, 2)).astype(np.float32))
+
+        def lg(params, mb):
+            def loss(p):
+                return jnp.mean((mb @ p["w"]) ** 2), {}
+            return jax.value_and_grad(loss, has_aux=True)(params)
+
+        (full, _), gfull = lg(w, xs)
+        loss_acc, gacc = gradlib.accumulate(lg, w, xs.reshape(4, 2, 2))
+        np.testing.assert_allclose(float(loss_acc), float(full), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(gacc["w"]), np.asarray(gfull["w"]),
+                                   rtol=1e-5)
+
+
+class TestData:
+    def test_determinism_and_host_disjointness(self):
+        src = SyntheticSource(vocab_size=1000, seed=7)
+        s1 = TokenStream(src, global_batch=8, seq_len=32, num_hosts=2, host_index=0)
+        s2 = TokenStream(src, global_batch=8, seq_len=32, num_hosts=2, host_index=0)
+        b1, b2 = s1.next(), s2.next()
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])  # replayable
+        h1 = TokenStream(src, global_batch=8, seq_len=32, num_hosts=2, host_index=1)
+        assert not np.array_equal(b1["tokens"], h1.next()["tokens"])
+
+    def test_labels_shift(self):
+        src = SyntheticSource(vocab_size=100, seed=0)
+        s = TokenStream(src, global_batch=2, seq_len=16)
+        b = s.next()
+        assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+
+    def test_seek_resume(self):
+        src = SyntheticSource(vocab_size=100, seed=0)
+        s = TokenStream(src, global_batch=2, seq_len=8)
+        [s.next() for _ in range(5)]
+        b5 = s.next()          # step 5
+        s2 = TokenStream(src, global_batch=2, seq_len=8)
+        s2.seek(5)
+        np.testing.assert_array_equal(b5["tokens"], s2.next()["tokens"])
+
+    def test_backfill_shard(self):
+        """A survivor can produce a dead host's shard exactly."""
+        src = SyntheticSource(vocab_size=100, seed=0)
+        dead = TokenStream(src, global_batch=8, seq_len=8, num_hosts=4, host_index=3)
+        survivor = TokenStream(src, global_batch=8, seq_len=8, num_hosts=4, host_index=0)
+        want = dead.next()
+        got = survivor.next(host_index=3)
+        np.testing.assert_array_equal(want["tokens"], got["tokens"])
+
+    def test_prefetcher(self):
+        src = SyntheticSource(vocab_size=100, seed=0)
+        s = TokenStream(src, global_batch=2, seq_len=8)
+        pf = Prefetcher(s, depth=2)
+        batches = [pf.next() for _ in range(4)]
+        pf.close()
+        assert len(batches) == 4
+
+
+class TestCheckpointer(object):
+    def test_save_restore_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = {"a": jnp.arange(10, dtype=jnp.float32),
+                "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+        ck.save(100, tree, blocking=True)
+        step, back = ck.restore_latest(tree)
+        assert step == 100
+        np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+        assert back["b"]["c"].dtype == np.asarray(tree["b"]["c"]).dtype
+
+    def test_keep_and_latest(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        tree = {"x": jnp.zeros(4)}
+        for s in (1, 2, 3, 4):
+            ck.save(s, tree, blocking=True)
+        assert ck.all_steps() == [3, 4]
+        assert ck.latest_step() == 4
+
+    def test_corruption_detected(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = {"x": jnp.arange(100, dtype=jnp.float32)}
+        ck.save(5, tree, blocking=True)
+        shard = os.path.join(str(tmp_path), "step_000000005", "shard_00000.npz")
+        with open(shard, "r+b") as f:
+            f.seek(120)
+            f.write(b"\xde\xad")
+        with pytest.raises(IOError):
+            ck.restore(5, tree)
+
+    def test_crash_mid_save_ignored(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = {"x": jnp.zeros(4)}
+        ck.save(1, tree, blocking=True)
+        os.makedirs(os.path.join(str(tmp_path), "step_000000002.tmp"))
+        ck2 = Checkpointer(str(tmp_path))      # restart
+        assert ck2.latest_step() == 1
+
+    def test_async_save(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = {"x": jnp.arange(1000, dtype=jnp.float32)}
+        ck.save(7, tree, blocking=False)
+        ck.wait()
+        assert ck.latest_step() == 7
+
+
+class TestElastic:
+    def test_plan_full_world(self):
+        plan = plan_remesh(64, list(range(64)), model_parallel=16,
+                           global_batch=256, devices_per_host=4)
+        assert plan.world_size <= 256
+        assert plan.model_parallel == 16
+        assert plan.data_parallel == 16
+
+    def test_plan_after_losses(self):
+        alive = [h for h in range(64) if h not in (3, 17, 40, 41)]
+        plan = plan_remesh(64, alive, model_parallel=16, global_batch=256)
+        assert plan.data_parallel <= 15
+        assert plan.data_parallel in (1, 2, 4, 8)   # pow2 + divides batch
+        assert 3 not in plan.active_hosts
+
+    def test_plan_fails_below_model_axis(self):
+        with pytest.raises(RuntimeError):
+            plan_remesh(64, [0, 1], model_parallel=16, global_batch=256,
+                        devices_per_host=4)
+
+    def test_straggler_detection_and_backfill(self):
+        pol = StragglerPolicy(deadline_factor=2.0)
+        times = {h: 1.0 for h in range(16)}
+        times[5] = 10.0
+        assert pol.is_straggler(times, 5)
+        assert not pol.is_straggler(times, 4)
+        mapping = pol.reassign([5], [h for h in range(16) if h != 5])
+        assert mapping == {0: 5}
+
+    def test_health_monitor(self):
+        mon = HealthMonitor(timeout_s=10)
+        for h in range(4):
+            mon.beat(h, now=100.0)
+        mon.beat(2, now=200.0)
+        assert mon.alive([0, 1, 2, 3], now=205.0) == [2]
+        assert mon.dead([0, 1, 2, 3], now=205.0) == [0, 1, 3]
