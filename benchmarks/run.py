@@ -2,10 +2,23 @@
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract,
 then the full model-vs-paper tables.  ``python -m benchmarks.run``
+(``--json-only`` runs just the kernel benches + JSON record, for CI).
+
+Also writes ``BENCH_ent_matmul.json`` — a machine-readable record of the
+EN-T serving-matmul variants at the canonical M=256, K=N=1024 shape so
+the perf trajectory is tracked across PRs:
+
+    w8a8_int8            plain int8 matmul, pre-quantized activations
+    ent_4plane_seed      seed path: quantize_acts + 4 digit-plane matmuls
+    ent_packed_2plane    packed planes: quantize_acts + 2 plane matmuls
+    ent_packed_fused     packed planes + fused in-kernel activation quant
+                         (the serving default; quant never round-trips HBM)
 """
 
 from __future__ import annotations
 
+import json
+import sys
 import time
 
 import jax
@@ -23,31 +36,90 @@ def _time_us(fn, *args, iters=20, warmup=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def ent_matmul_benches(m=256, k=1024, n=1024):
+    """The EN-T serving-matmul variant sweep; returns (csv_rows, record)."""
+    from repro.core.multiplier import (ent_digit_planes, ent_packed_planes,
+                                       ent_plane_matmul)
+    from repro.kernels.ent_matmul.ref import (ent_packed_fused_ref,
+                                              ent_packed_matmul_ref)
+    from repro.kernels.int8_matmul.ref import int8_matmul_ref
+    from repro.quant.quantize import quantize_acts
+
+    rng = np.random.default_rng(0)
+    xf = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+    sw = jnp.ones((1, n), jnp.float32)
+
+    enc = jax.jit(ent_digit_planes)
+    enc_packed = jax.jit(ent_packed_planes)
+    planes = jax.block_until_ready(enc(w))
+    packed = jax.block_until_ready(enc_packed(w))
+
+    # every variant measured as the FULL serving path from float acts,
+    # computing the plane matmuls the way the corresponding kernel does
+    # (N separate int dots + shift-adds), NOT via a decode-then-one-matmul
+    # shortcut — this is the software twin of the MXU work per layer
+    @jax.jit
+    def w8a8(xf, w):
+        q, s = quantize_acts(xf)
+        return int8_matmul_ref(q, w, s, sw, jnp.float32)
+
+    @jax.jit
+    def seed_4plane(xf, planes):
+        q, s = quantize_acts(xf)
+        acc = ent_plane_matmul(q, planes)            # 4 dots, as the seed kernel
+        return acc.astype(jnp.float32) * s * sw
+
+    @jax.jit
+    def packed_2plane(xf, packed):
+        q, s = quantize_acts(xf)
+        return ent_packed_matmul_ref(q, packed, s, sw, jnp.float32)
+
+    fused = jax.jit(lambda xf, packed: ent_packed_fused_ref(
+        xf, packed, sw, jnp.float32))
+
+    shape = f"{m}x{k}x{n}"
+    variants = {
+        "w8a8_int8": (_time_us(w8a8, xf, w),
+                      "plain int8 serving matmul (quant + 1 matmul)"),
+        "ent_4plane_seed": (_time_us(seed_4plane, xf, planes),
+                            "seed EN-T path (quant + 4 plane matmuls)"),
+        "ent_packed_2plane": (_time_us(packed_2plane, xf, packed),
+                              "packed planes (quant + 2 plane matmuls)"),
+        "ent_packed_fused": (_time_us(fused, xf, packed),
+                             "packed planes + fused in-kernel act quant"),
+    }
+    rows = [(f"{name}_{shape}", us, derived)
+            for name, (us, derived) in variants.items()]
+    rows.insert(0, (f"ent_encode_{k}x{n}", _time_us(enc, w),
+                    "one-time edge-encoder cost, amortized over serving"))
+    rows.insert(1, (f"ent_encode_packed_{k}x{n}", _time_us(enc_packed, w),
+                    "one-time packed-encoder cost (half the plane bytes)"))
+
+    record = {
+        "m": m, "k": k, "n": n,
+        "backend": jax.default_backend(),
+        "us_per_call": {name: round(us, 2)
+                        for name, (us, _) in variants.items()},
+        "speedup_packed_fused_vs_4plane_seed": round(
+            variants["ent_4plane_seed"][0] / variants["ent_packed_fused"][0],
+            3),
+        "encoded_weight_bytes": {"planes_4": int(np.asarray(planes).nbytes),
+                                 "planes_packed": int(np.asarray(packed).nbytes)},
+    }
+    return rows, record
+
+
 def kernel_benches():
     """CPU micro-benches of the core ops (oracle paths; Pallas on TPU)."""
-    from repro.core.multiplier import ent_digit_planes, ent_plane_matmul
-    from repro.kernels.int8_matmul.ref import int8_matmul_ref
     from repro.kernels.flash_attention.ref import attention_blockwise
     from repro.kernels.ssd_scan.ref import ssd_scan_chunked
 
     rng = np.random.default_rng(0)
-    rows = []
+    rows, record = ent_matmul_benches()
 
-    x = jnp.asarray(rng.integers(-128, 128, (256, 1024), dtype=np.int8))
-    w = jnp.asarray(rng.integers(-128, 128, (1024, 1024), dtype=np.int8))
-    sx = jnp.ones((256, 1), jnp.float32)
-    sw = jnp.ones((1, 1024), jnp.float32)
-
-    enc = jax.jit(ent_digit_planes)
-    rows.append(("ent_encode_1024x1024", _time_us(enc, w),
-                 "one-time edge-encoder cost, amortized over serving"))
-    planes = enc(w)
-    pm = jax.jit(ent_plane_matmul)
-    rows.append(("ent_plane_matmul_256x1024x1024", _time_us(pm, x, planes),
-                 "bit-exact digit-plane matmul (4 int8 matmuls + shifts)"))
-    im = jax.jit(lambda a, b: int8_matmul_ref(a, b, sx, sw))
-    rows.append(("int8_matmul_256x1024x1024", _time_us(im, x, w),
-                 "w8a8 reference path"))
+    with open("BENCH_ent_matmul.json", "w") as f:
+        json.dump(record, f, indent=1)
 
     q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)).astype(np.float32))
     fa = jax.jit(lambda q: attention_blockwise(q, q, q, chunk=256))
@@ -56,8 +128,8 @@ def kernel_benches():
 
     xs = jnp.asarray(rng.normal(size=(1, 512, 8, 64)).astype(np.float32))
     dt = jnp.asarray(rng.uniform(1e-3, 0.1, (1, 512, 8)).astype(np.float32))
-    a = -jnp.ones((8,), jnp.float32)
     bm = jnp.asarray(rng.normal(size=(1, 512, 1, 64)).astype(np.float32))
+    a = -jnp.ones((8,), jnp.float32)
     ssd = jax.jit(lambda x, d, b: ssd_scan_chunked(x, d, a, b, b, chunk=128))
     rows.append(("ssd_chunked_512", _time_us(ssd, xs, dt, bm),
                  "mamba2 SSD chunked scan"))
@@ -68,6 +140,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in kernel_benches():
         print(f"{name},{us:.1f},{derived}")
+
+    if "--json-only" in sys.argv:
+        return
 
     from benchmarks.paper_tables import ALL_TABLES
     for fn in ALL_TABLES:

@@ -27,12 +27,36 @@ __all__ = [
     "ent_digit_planes",
     "planes_to_weight",
     "ent_plane_matmul",
+    "pack_planes",
+    "unpack_planes",
+    "packed_to_weight",
+    "ent_packed_planes",
+    "ent_packed_matmul",
+    "np_pack_planes",
+    "np_ent_packed_matmul",
     "NUM_INT8_PLANES",
+    "NUM_PACKED_PLANES",
+    "PACKED_RADIX",
+    "PACKED_MAX_K",
 ]
 
 # int8 magnitude <= 128 < 192 => EN-T carry-out is always 0 (see encoding.py),
 # so an int8 weight needs exactly 4 signed digit planes.
 NUM_INT8_PLANES = 4
+
+# Packed form: adjacent plane pairs fused as packed_j = p_{2j} + 4*p_{2j+1},
+# so an int8 weight needs only 2 packed planes (W = packed_0 + 16*packed_1)
+# and a matmul needs only 2 int8 matmuls instead of 4.
+NUM_PACKED_PLANES = 2
+PACKED_RADIX = 4  # weight of the odd plane inside a packed pair
+
+# int32-overflow-safe contraction bound for the packed matmul: the full
+# accumulator sums K products |x*packed_0| + |x*packed_1*16|
+# <= 128 * 10 * (1 + 16) = 21760, so any K <= (2**31 - 1) // 21760
+# accumulates without int32 overflow even for worst-case generic digit
+# planes (planes from real int8 weights are tighter still: |packed_1| <= 8,
+# giving K < 2**17).
+PACKED_MAX_K = (2**31 - 1) // (128 * 10 * 17)
 
 
 def mbe_partial_products(a, b, n_bits: int):
@@ -129,6 +153,84 @@ def ent_plane_matmul(x_int8, planes):
     return acc
 
 
+# ----------------------------------------------------------------------------
+# Packed planes: pairs of digit planes fused into one int8 matmul operand.
+#
+# Since every digit plane value is in {-2,...,2}, two adjacent planes pack
+# into one int8 plane  packed_j = p_{2j} + 4*p_{2j+1}  with values in
+# [-10, 10], and  W = packed_0 + 16*packed_1  exactly.  A matmul then needs
+# TWO int8 matmuls (plus one shift-add) instead of four:
+#
+#     X @ W == (X @ packed_0) + ((X @ packed_1) << 4)
+#
+# halving both the MXU work per layer and the encoded-weight bytes, while
+# staying bit-exact in int32 for any K <= PACKED_MAX_K.
+# ----------------------------------------------------------------------------
+
+def pack_planes(planes):
+    """Fuse 4 digit planes [4, ...] int8 into 2 packed planes [2, ...] int8.
+
+    packed[j] = planes[2j] + 4*planes[2j+1], values in [-10, 10].  Exact:
+    packed_to_weight(pack_planes(p)) == planes_to_weight(p).
+    """
+    planes = jnp.asarray(planes)
+    if planes.shape[0] % 2 != 0:
+        raise ValueError(f"need an even number of planes, got {planes.shape[0]}")
+    lo = planes[0::2].astype(jnp.int8)
+    hi = planes[1::2].astype(jnp.int8)
+    return (lo + (hi << 2)).astype(jnp.int8)
+
+
+def unpack_planes(packed):
+    """Split packed planes [P, ...] back into digit planes [2P, ...].
+
+    The split hi = clip(floor((packed+2)/4), -2, 2), lo = packed - 4*hi is
+    a canonical decomposition with both digits in {-2,...,2} (the clip only
+    binds at packed == 10, where lo becomes 2); it satisfies
+    lo + 4*hi == packed so the weighted sum reconstructs the weight exactly
+    (individual digits may differ from the original encoder output — only
+    the weighted sum is canonical).
+    """
+    packed = jnp.asarray(packed).astype(jnp.int32)
+    hi = jnp.clip((packed + 2) >> 2, -2, 2)   # floor((p+2)/4), digit-set safe
+    lo = packed - (hi << 2)
+    p = packed.shape[0]
+    out = jnp.empty((2 * p,) + packed.shape[1:], jnp.int32)
+    out = out.at[0::2].set(lo).at[1::2].set(hi)
+    return out.astype(jnp.int8)
+
+
+def packed_to_weight(packed):
+    """Inverse matmul-operand view: sum_j packed[j] * 16**j (int32)."""
+    p = packed.shape[0]
+    weights = jnp.asarray([16**j for j in range(p)], jnp.int32).reshape(
+        (p,) + (1,) * (packed.ndim - 1)
+    )
+    return jnp.sum(packed.astype(jnp.int32) * weights, axis=0)
+
+
+def ent_packed_planes(w_int8):
+    """Hoisted edge encoder, packed form: int8 weights -> [2, ...] int8.
+
+    Composition of :func:`ent_digit_planes` and :func:`pack_planes` — runs
+    once per weight; every matmul after that costs 2 int8 matmuls.
+    """
+    return pack_planes(ent_digit_planes(w_int8))
+
+
+def ent_packed_matmul(x_int8, packed):
+    """X @ W from packed planes: 2 int8 matmuls + 1 shift-add, bit-exact.
+
+    x_int8: [m, k] int8; packed: [2, k, n] int8 packed planes.  Returns
+    int32 [m, n] == x.astype(i32) @ packed_to_weight(packed).  Requires
+    k <= PACKED_MAX_K for a provably overflow-free int32 accumulator.
+    """
+    x = x_int8.astype(jnp.int32)
+    acc = x @ packed[0].astype(jnp.int32)
+    acc = acc + ((x @ packed[1].astype(jnp.int32)) << 4)
+    return acc
+
+
 # Pure-numpy oracle (independent of the jnp implementation) ------------------
 
 def np_ent_plane_matmul(x: np.ndarray, w: np.ndarray) -> np.ndarray:
@@ -141,4 +243,25 @@ def np_ent_plane_matmul(x: np.ndarray, w: np.ndarray) -> np.ndarray:
     out = np.zeros((x.shape[0], w.shape[1]), np.int64)
     for i in range(4):
         out += (x.astype(np.int64) @ planes[i]) << (2 * i)
+    return out
+
+
+def np_pack_planes(planes: np.ndarray) -> np.ndarray:
+    """Numpy oracle of :func:`pack_planes` (int64 internally)."""
+    planes = np.asarray(planes, np.int64)
+    assert planes.shape[0] % 2 == 0
+    return (planes[0::2] + 4 * planes[1::2]).astype(np.int8)
+
+
+def np_ent_packed_matmul(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Oracle: encode w with the numpy encoder, pack, matmul in int64."""
+    sign = w < 0
+    mag = np.abs(w.astype(np.int64))
+    digits, carry = enc.np_ent_encode_unsigned(mag, 8)
+    assert np.all(carry == 0)
+    planes = np.where(sign[None, ...], -np.moveaxis(digits, -1, 0),
+                      np.moveaxis(digits, -1, 0))
+    packed = np_pack_planes(planes).astype(np.int64)
+    out = x.astype(np.int64) @ packed[0]
+    out += (x.astype(np.int64) @ packed[1]) << 4
     return out

@@ -1,0 +1,15 @@
+"""Pallas TPU API drift shims shared by all kernel families.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` across
+releases; resolve whichever this jax provides so the kernels import (and
+run in interpret mode) on every supported version.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

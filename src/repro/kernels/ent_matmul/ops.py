@@ -1,15 +1,30 @@
-"""Public op: EN-T encoded matmul with backend dispatch + weight pre-encoding."""
+"""Public op: EN-T encoded matmul with backend dispatch + weight pre-encoding.
+
+Three entry points, slowest to fastest serving path:
+
+* ``ent_quantized_matmul``        — seed 4-plane path (kept for parity tests)
+* ``ent_quantized_matmul_packed`` — packed 2-plane path, int8 activations
+* ``ent_quantized_matmul_fused``  — packed planes + in-kernel activation
+  quantization from f32/bf16 X (the serving default via quant.qdense_apply)
+
+Block sizes default from the shared shape-keyed table in
+``repro.kernels.tuning``; explicit ``block_*`` kwargs always win.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.multiplier import ent_digit_planes
-from repro.kernels.ent_matmul.ent_matmul import ent_matmul
-from repro.kernels.ent_matmul.ref import ent_matmul_ref
+from repro.core.multiplier import ent_digit_planes, ent_packed_planes
+from repro.kernels import tuning
+from repro.kernels.ent_matmul.ent_matmul import (ent_matmul, ent_matmul_packed,
+                                                 ent_matmul_packed_fused)
+from repro.kernels.ent_matmul.ref import (ent_matmul_ref, ent_packed_fused_ref,
+                                          ent_packed_matmul_ref, quantize_rows)
 
-__all__ = ["encode_weights", "ent_quantized_matmul"]
+__all__ = ["encode_weights", "encode_weights_packed", "ent_quantized_matmul",
+           "ent_quantized_matmul_packed", "ent_quantized_matmul_fused"]
 
 
 def encode_weights(w_int8: jax.Array) -> jax.Array:
@@ -22,12 +37,63 @@ def encode_weights(w_int8: jax.Array) -> jax.Array:
     return ent_digit_planes(w_int8)
 
 
+def encode_weights_packed(w_int8: jax.Array) -> jax.Array:
+    """Edge encoder, packed form: int8 weights -> [2, K, N] packed planes.
+
+    Same one-time cost, but every subsequent matmul needs only TWO int8
+    matmuls (and the encoded weights take half the bytes of the 4-plane
+    form).
+    """
+    return ent_packed_planes(w_int8)
+
+
+def _resolve(use_kernel: str) -> str:
+    if use_kernel == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return use_kernel
+
+
+def _blocks(shape, block_kw):
+    return tuning.get_block_config("ent_matmul", shape, block_kw)
+
+
 def ent_quantized_matmul(x, planes, scale_x, scale_w, *,
                          out_dtype=jnp.float32, use_kernel: str = "auto",
                          **block_kw):
-    if use_kernel == "auto":
-        use_kernel = "pallas" if jax.default_backend() == "tpu" else "ref"
+    use_kernel = _resolve(use_kernel)
     if use_kernel == "ref":
         return ent_matmul_ref(x, planes, scale_x, scale_w, out_dtype)
+    bk = _blocks((x.shape[0], x.shape[1], planes.shape[-1]), block_kw)
     return ent_matmul(x, planes, scale_x, scale_w, out_dtype=out_dtype,
-                      interpret=(use_kernel == "interpret"), **block_kw)
+                      interpret=(use_kernel == "interpret"), **bk)
+
+
+def ent_quantized_matmul_packed(x, packed, scale_x, scale_w, *,
+                                out_dtype=jnp.float32,
+                                use_kernel: str = "auto", **block_kw):
+    """Packed 2-plane matmul over pre-quantized int8 activations."""
+    use_kernel = _resolve(use_kernel)
+    if use_kernel == "ref":
+        return ent_packed_matmul_ref(x, packed, scale_x, scale_w, out_dtype)
+    bk = _blocks((x.shape[0], x.shape[1], packed.shape[-1]), block_kw)
+    return ent_matmul_packed(x, packed, scale_x, scale_w, out_dtype=out_dtype,
+                             interpret=(use_kernel == "interpret"), **bk)
+
+
+def ent_quantized_matmul_fused(x, packed, scale_w, *, out_dtype=jnp.float32,
+                               use_kernel: str = "auto", **block_kw):
+    """Fused path from UNquantized f32/bf16 activations.
+
+    The per-row quant scale is a cheap [M] amax reduction here; the int8
+    X itself is produced inside the kernel (never written to HBM).  On
+    non-TPU backends the jnp oracle fuses the same way under jit.
+    """
+    use_kernel = _resolve(use_kernel)
+    if use_kernel == "ref":
+        return ent_packed_fused_ref(x, packed, scale_w, out_dtype)
+    x32 = x.astype(jnp.float32)
+    _, sx = quantize_rows(x32)   # the int8 q is unused -> DCE'd under jit
+    bk = _blocks((x.shape[0], x.shape[1], packed.shape[-1]), block_kw)
+    return ent_matmul_packed_fused(
+        x32, packed, sx, scale_w, out_dtype=out_dtype,
+        interpret=(use_kernel == "interpret"), **bk)

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import tuning
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_blockwise, attention_ref
 
@@ -26,5 +27,7 @@ def attention(q, k, v, *, causal=True, window=None, scale=None,
     if use_kernel == "blockwise":
         return attention_blockwise(q, k, v, causal=causal, window=window,
                                    scale=scale)
+    bk = tuning.get_block_config(
+        "flash_attention", (q.shape[2], k.shape[2], q.shape[3]), block_kw)
     return flash_attention(q, k, v, causal=causal, window=window, scale=scale,
-                           interpret=(use_kernel == "interpret"), **block_kw)
+                           interpret=(use_kernel == "interpret"), **bk)

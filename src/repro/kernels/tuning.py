@@ -1,0 +1,205 @@
+"""Shape-keyed block-size selection shared by every Pallas kernel family.
+
+One table serves the three kernel families (``int8_matmul``,
+``ent_matmul`` — 4-plane, packed and fused variants — and
+``flash_attention``): callers that don't pass explicit block sizes get
+them from here instead of from per-call-site constants.
+
+Resolution order for a (family, shape) query:
+
+1. the in-memory table (autotuned this process, or loaded from the
+   JSON cache file at import of the first query);
+2. the persistent JSON cache (``REPRO_TUNING_CACHE`` env var, default
+   ``~/.cache/repro/tuning.json``) written by :func:`autotune`;
+3. divisibility-aware heuristic defaults (largest power-of-two block
+   that divides the dim, capped at the MXU-friendly sizes the seed
+   kernels shipped with).
+
+``autotune`` measures a candidate sweep with a caller-provided bench
+closure and persists the winner, so expensive searches run once per
+machine per shape bucket and every later process starts warm.  Shapes
+are bucketed to powers of two: one tuned entry covers the whole bucket.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+__all__ = [
+    "get_block_config",
+    "autotune",
+    "matmul_candidates",
+    "attention_candidates",
+    "record",
+    "clear",
+    "cache_path",
+]
+
+MATMUL_FAMILIES = ("int8_matmul", "ent_matmul")
+ATTENTION_FAMILIES = ("flash_attention",)
+
+# (family, key) -> config dict.  Populated by autotune()/record() and by
+# the JSON cache; consulted before the heuristics.
+_TABLE: dict = {}
+_LOADED = False
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_TUNING_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "tuning.json"),
+    )
+
+
+def _bucket(dim: int) -> int:
+    """Round up to a power of two — one table entry per bucket."""
+    b = 1
+    while b < dim:
+        b *= 2
+    return b
+
+
+def _key(family: str, shape) -> str:
+    return f"{family}:" + "x".join(str(_bucket(int(d))) for d in shape)
+
+
+def _load() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    try:
+        with open(cache_path()) as f:
+            _TABLE.update(json.load(f))
+    except (OSError, ValueError):
+        pass
+
+
+def _save() -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(_TABLE, f, indent=1, sort_keys=True)
+    except OSError:
+        pass  # read-only FS: in-memory table still serves this process
+
+
+def _fit(dim: int, cap: int) -> int:
+    """Largest power-of-two block <= cap that divides dim (>=1)."""
+    b = 1
+    while b < cap:
+        b *= 2
+    while b > 1 and (b > cap or dim % b != 0):
+        b //= 2
+    return b
+
+
+def _heuristic(family: str, shape) -> dict:
+    if family in MATMUL_FAMILIES:
+        m, k, n = (int(d) for d in shape)
+        # decode-like skinny M keeps the full row; big M tiles at 128
+        return {
+            "block_m": _fit(m, 128),
+            "block_n": _fit(n, 128),
+            "block_k": _fit(k, 512),
+        }
+    if family in ATTENTION_FAMILIES:
+        sq, skv, d = (int(x) for x in shape)
+        return {"block_q": _fit(sq, 128), "block_kv": _fit(skv, 128)}
+    raise KeyError(f"unknown kernel family: {family}")
+
+
+def _valid(family: str, shape, cfg: dict) -> bool:
+    """Does the config divide the ACTUAL dims after the kernels' min-clamp?
+    (Shapes are bucketed in the table, so a tuned entry from elsewhere in
+    the bucket may not divide this launch's dims.)"""
+    if family in MATMUL_FAMILIES:
+        dims = {"block_m": shape[0], "block_k": shape[1], "block_n": shape[2]}
+    else:
+        dims = {"block_q": shape[0], "block_kv": shape[1]}
+    return all(int(dims[k]) % min(int(cfg[k]), int(dims[k])) == 0
+               for k in dims if k in cfg)
+
+
+def get_block_config(family: str, shape, overrides: dict | None = None) -> dict:
+    """Block sizes for one kernel launch; explicit overrides always win."""
+    _load()
+    cached = _TABLE.get(_key(family, shape))
+    if cached is not None and not _valid(family, shape, cached):
+        cached = None
+    cfg = dict(cached or _heuristic(family, shape))
+    if overrides:
+        cfg.update({k: v for k, v in overrides.items() if v is not None})
+    return cfg
+
+
+def record(family: str, shape, config: dict, persist: bool = True) -> None:
+    """Pin ``config`` for the shape bucket (and persist it)."""
+    _load()
+    _TABLE[_key(family, shape)] = dict(config)
+    if persist:
+        _save()
+
+
+def clear() -> None:
+    """Drop the in-memory table (tests)."""
+    global _LOADED
+    _TABLE.clear()
+    _LOADED = True  # don't reload the file over a deliberate clear
+
+
+def matmul_candidates(m: int, k: int, n: int) -> list[dict]:
+    """Divisibility-filtered candidate sweep for the matmul families."""
+    out = []
+    for bm in (64, 128, 256):
+        for bn in (64, 128, 256):
+            for bk in (128, 256, 512, 1024):
+                if m % min(bm, m) or n % min(bn, n) or k % min(bk, k):
+                    continue
+                out.append({"block_m": min(bm, m), "block_n": min(bn, n),
+                            "block_k": min(bk, k)})
+    # dedupe after the min() clamps
+    uniq = {tuple(sorted(c.items())): c for c in out}
+    return list(uniq.values())
+
+
+def attention_candidates(sq: int, skv: int) -> list[dict]:
+    out = []
+    for bq in (64, 128, 256):
+        for bkv in (64, 128, 256, 512):
+            if sq % min(bq, sq) or skv % min(bkv, skv):
+                continue
+            out.append({"block_q": min(bq, sq), "block_kv": min(bkv, skv)})
+    uniq = {tuple(sorted(c.items())): c for c in out}
+    return list(uniq.values())
+
+
+def autotune(family: str, shape, bench, candidates: list[dict],
+             *, iters: int = 5, warmup: int = 2, persist: bool = True) -> dict:
+    """Measure ``bench(config) -> None`` over candidates, cache the winner.
+
+    ``bench`` must run the kernel to completion (block_until_ready) for
+    one call with the given block config; failures (e.g. VMEM overflow
+    for an oversized block) just disqualify that candidate.
+    """
+    _load()
+    best, best_t = None, float("inf")
+    for cfg in candidates:
+        try:
+            for _ in range(warmup):
+                bench(cfg)
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                bench(cfg)
+            dt = (time.perf_counter() - t0) / iters
+        except Exception:
+            continue
+        if dt < best_t:
+            best, best_t = cfg, dt
+    if best is None:
+        best = _heuristic(family, shape)
+    record(family, shape, best, persist=persist)
+    return best

@@ -70,8 +70,15 @@ def dense_init(key, cfg: ModelConfig, d_in: int, d_out: int, *, bias=False,
     return p
 
 
+# quantized-record markers: packed EN-T planes (serving default), legacy
+# 4-plane records, and plane-less plain-int8 records all route to qdense
+_QUANT_KEYS = ("planes_packed", "planes", "q")
+
+
 def dense_apply(p, x, compute_dtype):
-    if "q" in p:  # EN-T w8a8 record (repro.quant.quantize) — whole model
+    if any(k in p for k in _QUANT_KEYS):
+        # EN-T w8a8 record (repro.quant.quantize) — packed records run the
+        # fused kernel: in-kernel act quant + 2 plane matmuls + dequant
         from repro.quant.quantize import qdense_apply
         return qdense_apply(p, x, out_dtype=compute_dtype)
     y = x.astype(compute_dtype) @ p["kernel"].astype(compute_dtype)

@@ -4,17 +4,22 @@
 kernel (minus skip patterns) with a quantized record:
 
     {"q": int8 [I, O], "scale": f32 [1, O],          # per-out-channel
-     "planes": int8 [4, I, O]}                       # EN-T digit planes
+     "planes_packed": int8 [2, I, O]}                # packed EN-T planes
 
-The planes are produced ONCE here by the hoisted edge encoder
-(repro.core.multiplier.ent_digit_planes) — the paper's computation reuse
-amortized over the serving lifetime; every subsequent matmul consumes the
-encoded weights (repro.kernels.ent_matmul on TPU, its oracle elsewhere).
+The packed planes are produced ONCE here by the hoisted edge encoder
+(repro.core.multiplier.ent_packed_planes) — the paper's computation reuse
+amortized over the serving lifetime, at HALF the encoded-weight bytes and
+half the per-matmul MXU work of the seed 4-plane form (adjacent digit
+planes fuse as packed_j = p_2j + 4 p_{2j+1}, still bit-exact).
 
-``qdense_apply`` is the quantized counterpart of layers.dense_apply:
-dynamic per-row activation quantization + int accumulation + fused
-dequant.  ``layers.dense_apply`` dispatches here when it sees a "q" key,
-so the whole model zoo serves quantized without code changes.
+``qdense_apply`` is the quantized counterpart of layers.dense_apply: the
+float activations go straight into the FUSED packed matmul
+(repro.kernels.ent_matmul.ops.ent_quantized_matmul_fused), which performs
+the per-row int8 activation quantization inside the kernel — no separate
+``quantize_acts`` pass, no f32->int8 HBM round trip.  ``layers.dense_apply``
+dispatches here when it sees a "q" key, so the whole model zoo serves
+quantized without code changes.  Legacy records carrying 4-plane
+``planes`` (old checkpoints) still work via the unpacked path.
 """
 
 from __future__ import annotations
@@ -25,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import QuantConfig
-from repro.core.multiplier import ent_digit_planes
+from repro.core.multiplier import ent_packed_planes
 from repro.kernels.ent_matmul import ops as ent_ops
 from repro.kernels.int8_matmul import ops as int8_ops
 
@@ -34,7 +39,7 @@ __all__ = ["quantize_weight", "quantize_params", "quantize_acts",
 
 
 def quantize_weight(w, *, ent_encode: bool = True, per_channel: bool = True):
-    """Symmetric int8 quantization of a [I, O] kernel (+ EN-T planes)."""
+    """Symmetric int8 quantization of a [I, O] kernel (+ packed EN-T planes)."""
     w32 = w.astype(jnp.float32)
     if per_channel:
         amax = jnp.max(jnp.abs(w32), axis=0, keepdims=True)     # [1, O]
@@ -44,7 +49,7 @@ def quantize_weight(w, *, ent_encode: bool = True, per_channel: bool = True):
     q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
     rec = {"q": q, "scale": scale.astype(jnp.float32)}
     if ent_encode:
-        rec["planes"] = ent_digit_planes(q)
+        rec["planes_packed"] = ent_packed_planes(q)
     return rec
 
 
@@ -55,7 +60,9 @@ def dequantize_weight(rec):
 def quantize_acts(x):
     """Dynamic symmetric per-row int8 activation quantization.
 
-    x: [..., K] float -> (q int8, scale f32 [..., 1])."""
+    x: [..., K] float -> (q int8, scale f32 [..., 1]).  Kept for the plain
+    int8 path and external callers — the EN-T serving path quantizes
+    activations INSIDE the fused packed kernel instead."""
     x32 = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
     scale = jnp.maximum(amax, 1e-12) / 127.0
@@ -67,12 +74,19 @@ def qdense_apply(rec, x, out_dtype=jnp.bfloat16, use_kernel: str = "auto"):
     """Quantized matmul: x [..., K] float x rec -> [..., O]."""
     lead = x.shape[:-1]
     k = x.shape[-1]
-    xq, sx = quantize_acts(x.reshape(-1, k))
-    if "planes" in rec:
+    x2 = x.reshape(-1, k)
+    if "planes_packed" in rec:
+        # fused path: per-row act-quant happens inside the packed kernel
+        y = ent_ops.ent_quantized_matmul_fused(
+            x2, rec["planes_packed"], rec["scale"],
+            out_dtype=jnp.float32, use_kernel=use_kernel)
+    elif "planes" in rec:   # legacy 4-plane records
+        xq, sx = quantize_acts(x2)
         y = ent_ops.ent_quantized_matmul(
             xq, rec["planes"], sx, rec["scale"],
             out_dtype=jnp.float32, use_kernel=use_kernel)
     else:
+        xq, sx = quantize_acts(x2)
         y = int8_ops.quantized_matmul(
             xq, rec["q"], sx, rec["scale"],
             out_dtype=jnp.float32, use_kernel=use_kernel)

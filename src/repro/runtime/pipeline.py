@@ -78,11 +78,12 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh, num_micro: int,
             axis)
         return out_buf
 
-    y = jax.shard_map(
+    from repro.sharding import shard_map_compat
+    y = shard_map_compat(
         block,
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
+        check=False,
     )(stage_params, xm)
     return y.reshape((b,) + x.shape[1:])

@@ -23,11 +23,26 @@ def make_prefill_step(model: Model):
     return prefill
 
 
-def make_serve_step(model: Model):
-    """(params, cache, tokens[B]) -> (logits [B, V], cache) — one token."""
+def make_serve_step(model: Model, *, donate_cache: bool | None = None):
+    """(params, cache, tokens[B]) -> (logits [B, V], cache) — one token.
+
+    With EN-T quantized params every projection in this step runs the
+    FUSED packed-plane matmul (repro.quant.qdense_apply): per-row
+    activation quant happens inside the kernel against the [2, K, N]
+    packed planes — batched decode never materializes int8 activations
+    in HBM and issues 2 plane matmuls per layer instead of 4.
+
+    ``donate_cache`` donates the KV cache buffers to the jitted step so
+    decode updates happen in place (defaults to on for TPU, where buffer
+    donation is supported; harmless elsewhere but noisy).
+    """
+    if donate_cache is None:
+        donate_cache = jax.default_backend() == "tpu"
+
     def serve_step(params, cache, tokens):
         return model.decode_step(params, cache, tokens=tokens)
-    return serve_step
+
+    return jax.jit(serve_step, donate_argnums=(1,) if donate_cache else ())
 
 
 def generate(model: Model, params, prompt_tokens, steps: int, *,
@@ -36,7 +51,7 @@ def generate(model: Model, params, prompt_tokens, steps: int, *,
     b, s0 = prompt_tokens.shape
     max_len = max_len or (s0 + steps)
     cache = model.init_cache(b, max_len)
-    step = jax.jit(make_serve_step(model))
+    step = make_serve_step(model)
 
     # prefill token-by-token through the decode path (exactness over speed
     # on CPU; TPU serving prefills via model.apply + cache write-through)

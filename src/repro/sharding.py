@@ -27,6 +27,20 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """jax.shard_map across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=)``; 0.4.x has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+
+
 def _axis_size(mesh: Mesh, axis) -> int:
     if axis is None:
         return 1
@@ -88,9 +102,9 @@ def param_pspec(path: str, shape, mesh: Mesh, profile: str = "2d") -> P:
     core = shape[nlead:]
     # quantized records (repro.quant): q/planes/scale live under the
     # projection name; q shards like the kernel, planes add a lead [4]
-    # axis, scales follow the out-channel
-    if name in ("q", "planes") and parent in _COL + _ROW + ("lm_head",):
-        extra = 1 if name == "planes" else 0
+    # (or [2] packed) axis, scales follow the out-channel
+    if name in ("q", "planes", "planes_packed") and parent in _COL + _ROW + ("lm_head",):
+        extra = 0 if name == "q" else 1
         sub = param_pspec("/".join(parts[:-1]) + "/kernel",
                           shape[:nlead] + core[extra:], mesh, profile)
         return _guard((None,) * nlead + (None,) * extra + tuple(sub)[nlead:],

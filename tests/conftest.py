@@ -1,0 +1,15 @@
+"""Make src/ importable without installation and tests/ self-importable.
+
+``pip install -e .`` is the supported path (see pyproject.toml); this
+fallback keeps ``python -m pytest`` working from a bare checkout.
+"""
+
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+
+for p in (_SRC, _HERE):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -7,8 +7,7 @@ Every Pallas kernel is swept over shapes/dtypes and asserted allclose
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.multiplier import ent_digit_planes
 from repro.kernels.ent_matmul.ent_matmul import ent_matmul

@@ -23,13 +23,15 @@ class TestWeightQuant:
         per_col_scale = jnp.max(jnp.abs(w), axis=0) / 127.0
         assert float(jnp.max(err - per_col_scale[None, :] / 2)) <= 1e-6
 
-    def test_planes_reconstruct_q(self):
-        """The EN-T digit planes must decode to exactly the int8 weights."""
+    def test_packed_planes_reconstruct_q(self):
+        """The packed EN-T planes must decode to exactly the int8 weights."""
         rng = np.random.default_rng(1)
         w = jnp.asarray(rng.normal(size=(32, 48)).astype(np.float32))
         rec = quantize_weight(w, ent_encode=True)
-        weights = jnp.asarray([1, 4, 16, 64], jnp.int32)
-        recon = jnp.sum(rec["planes"].astype(jnp.int32)
+        assert rec["planes_packed"].shape == (2, 32, 48)
+        assert rec["planes_packed"].dtype == jnp.int8
+        weights = jnp.asarray([1, 16], jnp.int32)
+        recon = jnp.sum(rec["planes_packed"].astype(jnp.int32)
                         * weights[:, None, None], axis=0)
         np.testing.assert_array_equal(np.asarray(recon),
                                       np.asarray(rec["q"], np.int32))
@@ -66,7 +68,7 @@ class TestQuantizeParams:
         assert "kernel" in qparams["lm_head"]          # skipped: stays float
         assert "embedding" in qparams["embed"]
         g0 = qparams["groups"][0]
-        assert "q" in g0["mixer"]["wq"] and "planes" in g0["mixer"]["wq"]
+        assert "q" in g0["mixer"]["wq"] and "planes_packed" in g0["mixer"]["wq"]
         assert "scale" in g0["ffn_norm"]               # norms untouched
 
     def test_stacked_kernels_quantized_per_group(self, setup):
@@ -74,7 +76,7 @@ class TestQuantizeParams:
         wq = qparams["groups"][0]["mixer"]["wq"]
         g = params["groups"][0]["mixer"]["wq"]["kernel"].shape[0]
         assert wq["q"].shape[0] == g                  # [G, I, O] int8
-        assert wq["planes"].shape[:2] == (g, 4)       # vmapped planes
+        assert wq["planes_packed"].shape[:2] == (g, 2)  # vmapped packed planes
 
     def test_quantized_model_serves_close_to_float(self, setup):
         cfg, model, params, qparams = setup

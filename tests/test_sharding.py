@@ -12,14 +12,21 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 from repro import sharding as shd
 
 
+def _abstract_mesh(sizes, names):
+    try:  # newer jax: AbstractMesh(axis_sizes, axis_names)
+        return AbstractMesh(sizes, names)
+    except TypeError:  # jax<=0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 @pytest.fixture(scope="module")
 def mesh():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
 def pod_mesh():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 class TestParamRules:
@@ -85,6 +92,11 @@ class TestQuantizedRecords:
     def test_planes_lead_axis(self, mesh):
         spec = shd.param_pspec("groups/0/mixer/wq/planes", (32, 4, 4096, 4096),
                                mesh, profile="serve_tp")
+        assert spec == P(None, None, None, "model")
+
+    def test_packed_planes_lead_axis(self, mesh):
+        spec = shd.param_pspec("groups/0/mixer/wq/planes_packed",
+                               (32, 2, 4096, 4096), mesh, profile="serve_tp")
         assert spec == P(None, None, None, "model")
 
     def test_scale_follows_out_channel(self, mesh):

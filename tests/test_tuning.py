@@ -1,0 +1,105 @@
+"""Shape-keyed block-size tuning table: heuristics, cache, validation."""
+
+import json
+
+import pytest
+
+from repro.kernels import tuning
+
+
+@pytest.fixture(autouse=True)
+def isolated_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "tuning.json"))
+    tuning.clear()
+    yield
+    tuning.clear()
+
+
+class TestHeuristics:
+    def test_matmul_defaults_divide(self):
+        for shape in [(256, 1024, 1024), (8, 128, 128), (96, 384, 192),
+                      (1, 64, 64)]:
+            cfg = tuning.get_block_config("ent_matmul", shape)
+            m, k, n = shape
+            assert m % cfg["block_m"] == 0
+            assert k % cfg["block_k"] == 0
+            assert n % cfg["block_n"] == 0
+
+    def test_decode_skinny_m(self):
+        cfg = tuning.get_block_config("int8_matmul", (8, 4096, 4096))
+        assert cfg["block_m"] == 8
+
+    def test_attention_defaults_divide(self):
+        cfg = tuning.get_block_config("flash_attention", (256, 384, 64))
+        assert 256 % cfg["block_q"] == 0 and 384 % cfg["block_kv"] == 0
+
+    def test_unknown_family_raises(self):
+        with pytest.raises(KeyError):
+            tuning.get_block_config("conv3d", (1, 2, 3))
+
+
+class TestTableAndCache:
+    def test_record_then_lookup_same_bucket(self):
+        tuning.record("ent_matmul", (256, 1024, 1024),
+                      {"block_m": 64, "block_n": 256, "block_k": 1024})
+        cfg = tuning.get_block_config("ent_matmul", (256, 1024, 1024))
+        assert cfg == {"block_m": 64, "block_n": 256, "block_k": 1024}
+        # bucketing: 200 rounds up to the 256 bucket
+        cfg2 = tuning.get_block_config("ent_matmul", (200, 1024, 1024))
+        # 200 % 64 != 0 -> cached entry is invalid for this launch, falls
+        # back to a divisibility-safe heuristic
+        assert 200 % cfg2["block_m"] == 0
+
+    def test_persisted_and_reloaded(self):
+        tuning.record("int8_matmul", (128, 512, 512),
+                      {"block_m": 128, "block_n": 128, "block_k": 256})
+        with open(tuning.cache_path()) as f:
+            data = json.load(f)
+        assert "int8_matmul:128x512x512" in data
+        tuning.clear()
+        tuning._LOADED = False  # force reload from disk
+        cfg = tuning.get_block_config("int8_matmul", (128, 512, 512))
+        assert cfg["block_k"] == 256
+
+    def test_overrides_win(self):
+        cfg = tuning.get_block_config("ent_matmul", (256, 1024, 1024),
+                                      {"block_k": 128, "block_m": None})
+        assert cfg["block_k"] == 128
+        assert cfg["block_m"] == 128  # None override ignored -> heuristic
+
+
+class TestAutotune:
+    def test_picks_fastest_and_caches(self):
+        calls = []
+
+        def bench(cfg):
+            calls.append(cfg["block_k"])
+            if cfg["block_k"] == 512:
+                return  # fastest: returns immediately
+            import time
+            time.sleep(0.002)
+
+        cands = [{"block_m": 128, "block_n": 128, "block_k": bk}
+                 for bk in (128, 256, 512)]
+        best = tuning.autotune("ent_matmul", (128, 1024, 1024), bench, cands,
+                               iters=2, warmup=1)
+        assert best["block_k"] == 512
+        assert tuning.get_block_config(
+            "ent_matmul", (128, 1024, 1024))["block_k"] == 512
+
+    def test_failing_candidates_disqualified(self):
+        def bench(cfg):
+            if cfg["block_k"] == 1024:
+                raise RuntimeError("VMEM overflow")
+
+        cands = [{"block_m": 64, "block_n": 64, "block_k": bk}
+                 for bk in (1024, 256)]
+        best = tuning.autotune("ent_matmul", (64, 1024, 64), bench, cands,
+                               iters=1, warmup=0)
+        assert best["block_k"] == 256
+
+    def test_candidate_generators_divide(self):
+        for c in tuning.matmul_candidates(96, 384, 192):
+            assert 96 % c["block_m"] == 0 and 384 % c["block_k"] == 0
+        for c in tuning.attention_candidates(256, 384):
+            assert 256 % c["block_q"] == 0 and 384 % c["block_kv"] == 0
