@@ -13,6 +13,9 @@ the perf trajectory is tracked across PRs:
     ent_packed_2plane    packed planes: quantize_acts + 2 plane matmuls
     ent_packed_fused     packed planes + fused in-kernel activation quant
                          (the serving default; quant never round-trips HBM)
+
+and, under ``"serving"``, the engine-path throughputs: batched one-pass
+prefill vs the seed's token-by-token prefill, and steady-state decode.
 """
 
 from __future__ import annotations
@@ -110,6 +113,79 @@ def ent_matmul_benches(m=256, k=1024, n=1024):
     return rows, record
 
 
+def serving_benches(s0=64, batch=4, decode_steps=16):
+    """Prefill/decode throughput of the serving engine paths.
+
+    Measures the batched one-forward-pass prefill (model.apply cache
+    write-through) against the seed's token-by-token decode prefill at
+    the same [batch, s0] prompt, plus steady-state batched decode.
+    Returns (csv_rows, record) — the record lands in
+    BENCH_ent_matmul.json under "serving" to track the trajectory per PR.
+    """
+    from repro.configs import get_config, reduced_config
+    from repro.models.transformer import build_model
+    from repro.runtime.serve_loop import make_serve_step
+
+    cfg = reduced_config(get_config("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, s0)),
+                          jnp.int32)
+    max_len = s0 + decode_steps
+    step = make_serve_step(model)
+    pf = jax.jit(lambda p, t: model.prefill(
+        p, model.init_cache(batch, max_len), tokens=t))
+
+    def seq_prefill():
+        cache = model.init_cache(batch, max_len)
+        logits = None
+        for t in range(s0):
+            logits, cache = step(params, cache, prompts[:, t])
+        return logits, cache
+
+    def timed(fn, iters=5):
+        jax.block_until_ready(fn())   # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters
+
+    t_seq = timed(seq_prefill)
+    t_bat = timed(lambda: pf(params, prompts))
+
+    _, cache0 = pf(params, prompts)
+    tok0 = jnp.zeros((batch,), jnp.int32)
+
+    def decode_run():
+        cache = cache0
+        logits = None
+        for _ in range(decode_steps):
+            logits, cache = step(params, cache, tok0)
+        return logits
+
+    t_dec = timed(decode_run) / decode_steps
+
+    ptoks = batch * s0
+    rows = [
+        (f"serve_prefill_seq_{batch}x{s0}", t_seq * 1e6,
+         "token-by-token decode prefill (seed path)"),
+        (f"serve_prefill_batched_{batch}x{s0}", t_bat * 1e6,
+         "one-pass model.apply cache write-through"),
+        (f"serve_decode_step_b{batch}", t_dec * 1e6,
+         "steady-state batched decode step"),
+    ]
+    record = {
+        "s0": s0, "batch": batch, "backend": jax.default_backend(),
+        "prefill_tok_s_sequential": round(ptoks / t_seq, 1),
+        "prefill_tok_s_batched": round(ptoks / t_bat, 1),
+        "prefill_speedup_batched_vs_sequential": round(t_seq / t_bat, 2),
+        "decode_tok_s": round(batch / t_dec, 1),
+    }
+    return rows, record
+
+
 def kernel_benches():
     """CPU micro-benches of the core ops (oracle paths; Pallas on TPU)."""
     from repro.kernels.flash_attention.ref import attention_blockwise
@@ -117,6 +193,9 @@ def kernel_benches():
 
     rng = np.random.default_rng(0)
     rows, record = ent_matmul_benches()
+    srows, srecord = serving_benches()
+    rows += srows
+    record["serving"] = srecord
 
     with open("BENCH_ent_matmul.json", "w") as f:
         json.dump(record, f, indent=1)

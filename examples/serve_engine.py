@@ -1,0 +1,47 @@
+"""Continuous-batching serving demo: a ragged request stream through the
+ServeEngine — batched one-pass prefill on admission, per-slot EOS stop,
+finished slots refilled while the rest keep decoding, streamed tokens.
+
+    PYTHONPATH=src python examples/serve_engine.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models.transformer import build_model
+from repro.runtime.serve_loop import ServeEngine, generate
+
+cfg = reduced_config(get_config("qwen2.5-3b"))
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# a ragged burst of requests: more requests than slots, varied lengths
+rng = np.random.default_rng(0)
+prompts = [rng.integers(1, cfg.vocab_size, int(n)).tolist()
+           for n in rng.integers(3, 24, size=6)]
+
+stream: dict[int, int] = {}
+def on_token(uid, tok, done):
+    stream[uid] = stream.get(uid, 0) + 1
+    if done:
+        print(f"  request {uid}: done after {stream[uid]} streamed tokens")
+
+engine = ServeEngine(model, params, slots=2, max_len=64, on_token=on_token)
+uids = [engine.submit(p, max_new_tokens=8) for p in prompts]
+print(f"submitted {len(uids)} requests (prompt lens "
+      f"{[len(p) for p in prompts]}) into 2 slots")
+
+t0 = time.time()
+results = engine.run()
+dt = time.time() - t0
+total = sum(len(v) for v in results.values())
+print(f"served {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s)")
+
+# the engine's continuous batching is exact: same greedy tokens as a
+# dedicated generate() call per request
+ref = generate(model, params, np.asarray([prompts[0]]), steps=8)
+match = results[uids[0]] == np.asarray(ref)[0].tolist()
+print(f"engine output == per-request generate: {match}")

@@ -72,19 +72,29 @@ def _load() -> None:
     _LOADED = True
     try:
         with open(cache_path()) as f:
-            _TABLE.update(json.load(f))
+            data = json.load(f)
     except (OSError, ValueError):
-        pass
+        return  # missing, truncated or corrupt cache: start from heuristics
+    if isinstance(data, dict):  # tolerate a clobbered non-dict payload too
+        _TABLE.update({k: v for k, v in data.items() if isinstance(v, dict)})
 
 
 def _save() -> None:
     path = cache_path()
+    # write-to-temp + atomic rename: concurrent pytest/benchmark processes
+    # each land a complete file instead of interleaving into corrupt JSON
+    tmp = f"{path}.{os.getpid()}.tmp"
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        with open(path, "w") as f:
+        with open(tmp, "w") as f:
             json.dump(_TABLE, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
     except OSError:
-        pass  # read-only FS: in-memory table still serves this process
+        # read-only FS: in-memory table still serves this process
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
 
 
 def _fit(dim: int, cap: int) -> int:

@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         [--quantize] [--steps 32] [--batch 4]
+
+``--engine`` serves a ragged request stream through the continuous-
+batching ``ServeEngine`` (fixed slots, batched prefill on admission,
+per-slot EOS/max-token stop) instead of one fixed-shape ``generate``.
 """
 
 from __future__ import annotations
@@ -17,7 +21,7 @@ from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.configs.base import QuantConfig
 from repro.models.transformer import build_model
 from repro.quant.quantize import quantize_params
-from repro.runtime.serve_loop import generate
+from repro.runtime.serve_loop import ServeEngine, generate
 
 
 def main():
@@ -28,6 +32,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--quantize", action="store_true",
                     help="EN-T w8a8: encode weights once, serve int8")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching ServeEngine over a ragged "
+                         "request stream (requests = 2x --batch)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="engine batch slots (default: --batch)")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
 
@@ -42,6 +51,28 @@ def main():
         print(f"EN-T encode (once): {time.time()-t0:.2f}s")
 
     rng = np.random.default_rng(0)
+
+    if args.engine:
+        slots = args.slots or args.batch
+        n_req = 2 * args.batch
+        max_len = 2 * args.prompt_len + args.steps + 8
+        engine = ServeEngine(model, params, slots=slots, max_len=max_len)
+        lens = rng.integers(max(1, args.prompt_len // 2),
+                            args.prompt_len + 1, n_req)
+        t0 = time.time()
+        for n in lens:
+            engine.submit(rng.integers(0, cfg.vocab_size, int(n)),
+                          max_new_tokens=args.steps)
+        results = engine.run()
+        dt = time.time() - t0
+        total = sum(len(v) for v in results.values())
+        print(f"engine: served {n_req} ragged requests "
+              f"(prompt lens {lens.min()}..{lens.max()}) on {slots} slots: "
+              f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s)")
+        uid0 = min(results)
+        print("sample:", results[uid0][:16])
+        return
+
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
         jnp.int32)

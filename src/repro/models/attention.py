@@ -82,46 +82,60 @@ def _quantize_kv(t):
     return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
 
 
-def decode_step(cfg: ModelConfig, p, x, cache, pos):
-    """One-token decode.  x: [B, 1, D]; pos: scalar int32 (current index).
+def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
+    """One-token decode.  x: [B, 1, D]; pos: scalar int32 cache index, or a
+    per-sequence [B] vector (continuous batching: each serving slot sits at
+    its own depth).
 
-    Returns (y [B, 1, D], updated cache).  Keys are rotated at write time
-    with their absolute position; ring slots are masked by reconstructing
-    each slot's absolute position from ``pos``.  Supports bf16 and
-    quantized (int8 + per-head scale) caches; scales are folded EXACTLY
-    into the attention dots (K: after the q.k dot; V: into the
-    probabilities), so int8 KV changes bytes, not math beyond round-off.
+    Returns (y [B, 1, D], updated cache).  Keys are rotated at write time;
+    ring slots are masked by reconstructing each slot's absolute position
+    from ``pos``.  ``start`` ([B] int32, optional) is the number of
+    left-pad slots per sequence for ragged batches: RoPE positions become
+    ``pos - start`` (real tokens count from 0) and slots below ``start``
+    are masked out of the attention forever.  Supports bf16 and quantized
+    (int8 + per-head scale) caches; scales are folded EXACTLY into the
+    attention dots (K: after the q.k dot; V: into the probabilities), so
+    int8 KV changes bytes, not math beyond round-off.
     """
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_seq = pos.ndim > 0              # [B] positions (serving slots)
+    pos_b = jnp.broadcast_to(pos, (b,))
+    start_b = (jnp.zeros((b,), jnp.int32) if start is None
+               else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
+    positions = (pos_b - start_b)[:, None]
     q, k, v = _project(cfg, p, x, positions)          # q: [B,1,H,hd]
     w = cache["k"].shape[1]
     slot = pos % w if cfg.sliding_window else pos
+
+    def upd(c, new):
+        new = new.astype(c.dtype)
+        if per_seq:  # one write index per sequence
+            return jax.vmap(
+                lambda cb, nb, sb: jax.lax.dynamic_update_slice_in_dim(
+                    cb, nb, sb, 0))(c, new, slot)
+        return jax.lax.dynamic_update_slice_in_dim(c, new, slot, 1)
+
     quantized = "k_s" in cache
     if quantized:
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
-        upd = jax.lax.dynamic_update_slice_in_dim
-        ck = upd(cache["k"], kq, slot, 1)
-        cv = upd(cache["v"], vq, slot, 1)
-        cks = upd(cache["k_s"], ks, slot, 1)
-        cvs = upd(cache["v_s"], vs, slot, 1)
+        ck, cv = upd(cache["k"], kq), upd(cache["v"], vq)
+        cks, cvs = upd(cache["k_s"], ks), upd(cache["v_s"], vs)
     else:
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, 1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, 1)
+        ck, cv = upd(cache["k"], k), upd(cache["v"], v)
 
     # absolute position held by each ring slot (== slot index when the
     # cache is not a ring buffer)
-    idx = jnp.arange(w)
+    idx = jnp.arange(w)[None, :]
     if cfg.sliding_window:
-        slot_pos = pos - ((pos - idx) % w)
+        slot_pos = pos_b[:, None] - ((pos_b[:, None] - idx) % w)
     else:
-        slot_pos = idx
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
+        slot_pos = jnp.broadcast_to(idx, (b, w))
+    valid = ((slot_pos >= 0) & (slot_pos <= pos_b[:, None])
+             & (slot_pos >= start_b[:, None]))
     if cfg.sliding_window:
-        valid &= slot_pos > pos - cfg.sliding_window
+        valid &= slot_pos > pos_b[:, None] - cfg.sliding_window
 
     # grouped-query attention against the cache (einsum path: the mask is
     # position-scattered, which the contiguous flash kernel can't express).
@@ -136,8 +150,12 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos):
                    preferred_element_type=jnp.float32) * (cfg.head_dim**-0.5)
     if quantized:  # fold the per-slot K scale in after the dot (exact)
         s = s * cks[..., 0].transpose(0, 2, 1)[:, :, None, :].astype(jnp.float32)
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     pattn = jax.nn.softmax(s, axis=-1)
+    # a fully-masked row (query is itself a left-pad slot) would softmax
+    # to uniform attention over path-dependent cache garbage — zero it so
+    # pad outputs are deterministic (x1.0 no-op for every real query)
+    pattn = pattn * jnp.any(valid, -1)[:, None, None, None].astype(jnp.float32)
     if quantized:  # fold the per-slot V scale into the probabilities
         pattn = pattn * cvs[..., 0].transpose(0, 2, 1)[:, :, None, :].astype(jnp.float32)
         vop = cv.astype(dt)
@@ -146,6 +164,81 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos):
     out = jnp.einsum("bhgw,bwhd->bhgd", pattn.astype(dt), vop,
                      preferred_element_type=jnp.float32)
     out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(L.cdtype(cfg))
+    y = L.dense_apply(p["wo"], out, L.cdtype(cfg))
+    new = {"k": ck, "v": cv}
+    if quantized:
+        new.update(k_s=cks, v_s=cvs)
+    return y, new
+
+
+def prefill_step(cfg: ModelConfig, p, x, cache, start=None):
+    """Whole-prompt forward with KV cache write-through: the batched twin
+    of ``decode_step``.  x: [B, S, D] -> (y [B, S, D], updated cache).
+
+    All S keys/values are rotated and written to slots 0..S-1 in one shot,
+    and every query attends over the full cache width with the SAME einsum
+    structure and mask semantics as ``decode_step`` — slots beyond the
+    query column (or below ``start``) are -1e30 before the softmax, so the
+    result is bit-identical to stepping the prompt token by token.
+
+    Requires S <= cache width (a sliding-window ring that wraps during
+    prefill cannot be expressed as one dense attention; ``generate`` falls
+    back to the sequential path in that case).
+    """
+    b, s, _ = x.shape
+    w = cache["k"].shape[1]
+    if s > w:
+        raise ValueError(
+            f"prefill length {s} exceeds cache width {w}; use the "
+            "sequential (token-by-token) prefill for wrapped ring buffers")
+    cols = jnp.arange(s, dtype=jnp.int32)
+    start_b = (jnp.zeros((b,), jnp.int32) if start is None
+               else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
+    positions = cols[None, :] - start_b[:, None]      # [B, S] relative
+    q, k, v = _project(cfg, p, x, positions)
+
+    def upd(c, new):
+        return jax.lax.dynamic_update_slice_in_dim(c, new.astype(c.dtype), 0, 1)
+
+    quantized = "k_s" in cache
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ck, cv = upd(cache["k"], kq), upd(cache["v"], vq)
+        cks, cvs = upd(cache["k_s"], ks), upd(cache["v_s"], vs)
+    else:
+        ck, cv = upd(cache["k"], k), upd(cache["v"], v)
+
+    # attention contracts over the S prompt columns only — cache columns
+    # >= S are unwritten this prefill and would be masked to exact zeros
+    # anyway, so slicing them off is bit-identical and saves W/S of the
+    # score FLOPs (the engine prefills small buckets against wide caches)
+    idx = jnp.arange(s)
+    valid = ((idx[None, None, :] <= cols[None, :, None])
+             & (idx[None, None, :] >= start_b[:, None, None]))
+    if cfg.sliding_window:
+        valid &= idx[None, None, :] > cols[None, :, None] - cfg.sliding_window
+
+    group = cfg.num_heads // cfg.num_kv_heads
+    qh = q.reshape(b, s, cfg.num_kv_heads, group, cfg.head_dim)
+    dt = L.cdtype(cfg)
+    kop = ck[:, :s] if not quantized else ck[:, :s].astype(dt)
+    sc = jnp.einsum("bqhgd,bwhd->bqhgw", qh.astype(dt), kop,
+                    preferred_element_type=jnp.float32) * (cfg.head_dim**-0.5)
+    if quantized:
+        sc = sc * cks[:, :s, :, 0].transpose(0, 2, 1)[:, None, :, None, :].astype(jnp.float32)
+    sc = jnp.where(valid[:, :, None, None, :], sc, -1e30)
+    pattn = jax.nn.softmax(sc, axis=-1)
+    # pad-slot queries (fully-masked rows): zero, as in decode_step
+    pattn = pattn * jnp.any(valid, -1)[:, :, None, None, None].astype(jnp.float32)
+    if quantized:
+        pattn = pattn * cvs[:, :s, :, 0].transpose(0, 2, 1)[:, None, :, None, :].astype(jnp.float32)
+        vop = cv[:, :s].astype(dt)
+    else:
+        vop = cv[:, :s]
+    out = jnp.einsum("bqhgw,bwhd->bqhgd", pattn.astype(dt), vop,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim).astype(L.cdtype(cfg))
     y = L.dense_apply(p["wo"], out, L.cdtype(cfg))
     new = {"k": ck, "v": cv}
     if quantized:

@@ -118,8 +118,14 @@ def init_cache(cfg: ModelConfig, batch: int, dtype):
     }
 
 
-def decode_step(cfg: ModelConfig, p, x, cache, pos):
-    """One-token decode.  x: [B, 1, D] -> (y [B, 1, D], new cache)."""
+def decode_step(cfg: ModelConfig, p, x, cache, pos, token_mask=None):
+    """One-token decode.  x: [B, 1, D] -> (y [B, 1, D], new cache).
+
+    ``token_mask`` ([B] bool, optional): False entries are pad tokens —
+    their conv history contribution is zeroed and the SSD state is left
+    untouched, so left-padded prompts produce the same state a padding-
+    free sequence would (the SSM is position-free).
+    """
     del pos  # SSM state is position-free
     s = cfg.ssm
     b = x.shape[0]
@@ -130,6 +136,8 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos):
     z, xin, bmat, cmat, dtt = _split(cfg, zxbcdt)
 
     xbc = jnp.concatenate([xin, bmat, cmat], -1)             # [B, conv_dim]
+    if token_mask is not None:
+        xbc = xbc * token_mask[:, None].astype(xbc.dtype)
     hist = jnp.concatenate([cache["conv"], xbc[:, None]], 1)  # [B, W, conv_dim]
     conv_out = jnp.einsum("bwd,wd->bd", hist.astype(jnp.float32),
                           p["conv"].astype(jnp.float32))
@@ -145,7 +153,73 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos):
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
 
     new_ssd, y = ssd_decode_step_ref(cache["ssd"], xh, dt_soft, a, bm, cm)
+    if token_mask is not None:  # pad step: state carries through unchanged
+        new_ssd = jnp.where(token_mask[:, None, None, None], new_ssd,
+                            cache["ssd"])
     y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
     y_flat = y.reshape(b, 1, d_inner).astype(dtype)
     out = _gated_out(cfg, p, y_flat, z[:, None])
     return out, {"conv": new_conv, "ssd": new_ssd}
+
+
+def prefill_step(cfg: ModelConfig, p, x, cache, mask=None):
+    """Whole-prompt forward with cache write-through: the batched twin of
+    ``decode_step``.  x: [B, S, D] -> (y [B, S, D], new cache).
+
+    The projections and the depthwise conv are computed for all S
+    positions at once; only the [B, H, P, N] state recurrence runs as a
+    ``lax.scan`` over time, using the SAME per-step update as decode —
+    which makes the final (conv, ssd) cache bit-identical to stepping the
+    prompt token by token.  ``mask`` ([B, S] bool, True = real token)
+    handles left-padded ragged batches exactly like ``token_mask`` in
+    decode: pad columns contribute zeros to the conv window and leave the
+    SSD state untouched.
+    """
+    s = cfg.ssm
+    b, slen, _ = x.shape
+    d_inner, nheads, conv_dim = dims(cfg)
+    dtype = L.cdtype(cfg)
+
+    zxbcdt = L.dense_apply(p["in_proj"], x, dtype)           # [B, S, d_in_proj]
+    z, xin, bmat, cmat, dtt = _split(cfg, zxbcdt)
+
+    xbc = jnp.concatenate([xin, bmat, cmat], -1)             # [B, S, conv_dim]
+    if mask is not None:
+        xbc = xbc * mask[..., None].astype(xbc.dtype)
+    hist = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], 1)
+    new_conv = hist[:, slen:]                                # last W-1 columns
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    # The conv contraction, split and SSD update run per timestep inside
+    # the scan with the SAME operand shapes as decode_step — any batched
+    # reformulation (e.g. one [B, S] conv einsum) changes XLA's reduction
+    # fusion and breaks bit-identity with the sequential path.  ``hist``
+    # is closed over and sliced per step: O(1) extra memory, no [S, B, W]
+    # window stack.
+    def step(h, inp):
+        t, dtt_t, mt = inp    # scalar step index, [B, nheads], [B]
+        w_t = jax.lax.dynamic_slice_in_dim(hist, t, s.conv_width, axis=1)
+        conv_out = jnp.einsum("bwd,wd->bd", w_t.astype(jnp.float32),
+                              p["conv"].astype(jnp.float32))
+        conv_out = jax.nn.silu(
+            conv_out + p["conv_bias"].astype(jnp.float32)).astype(dtype)
+        xin_t, bm_t, cm_t = jnp.split(
+            conv_out, [d_inner, d_inner + s.ngroups * s.state_dim], -1)
+        xh_t = xin_t.reshape(b, nheads, s.head_dim).astype(jnp.float32)
+        bm_t = bm_t.reshape(b, s.ngroups, s.state_dim).astype(jnp.float32)
+        cm_t = cm_t.reshape(b, s.ngroups, s.state_dim).astype(jnp.float32)
+        dt_soft = jax.nn.softplus(dtt_t.astype(jnp.float32)
+                                  + p["dt_bias"].astype(jnp.float32))
+        h2, yt = ssd_decode_step_ref(h, xh_t, dt_soft, a, bm_t, cm_t)
+        if mask is not None:
+            h2 = jnp.where(mt[:, None, None, None], h2, h)
+        yt = yt + xh_t * p["d_skip"].astype(jnp.float32)[None, :, None]
+        return h2, yt
+
+    tmask = (jnp.ones((b, slen), bool) if mask is None else mask)
+    new_ssd, ys = jax.lax.scan(
+        step, cache["ssd"],
+        (jnp.arange(slen), jnp.moveaxis(dtt, 1, 0), jnp.moveaxis(tmask, 1, 0)))
+    y_flat = jnp.moveaxis(ys, 0, 1).reshape(b, slen, d_inner).astype(dtype)
+    out = _gated_out(cfg, p, y_flat, z)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "ssd": new_ssd}

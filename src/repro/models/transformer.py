@@ -73,15 +73,42 @@ def _layer_apply(cfg: ModelConfig, spec, p, x, dist=None):
     return x, aux
 
 
-def _layer_decode(cfg: ModelConfig, spec, p, x, cache, pos, dist=None):
+def _layer_decode(cfg: ModelConfig, spec, p, x, cache, pos, dist=None,
+                  start=None, token_mask=None):
     mixer, ffn = spec
     if mixer == "attn":
         h = L.norm_apply(cfg, p["mixer_norm"], x)
-        y, cache = attention.decode_step(cfg, p["mixer"], h, cache, pos)
+        y, cache = attention.decode_step(cfg, p["mixer"], h, cache, pos,
+                                         start=start)
         x = x + y
     elif mixer == "ssm":
         h = L.norm_apply(cfg, p["mixer_norm"], x)
-        y, cache = ssm.decode_step(cfg, p["mixer"], h, cache, pos)
+        y, cache = ssm.decode_step(cfg, p["mixer"], h, cache, pos,
+                                   token_mask=token_mask)
+        x = x + y
+    if ffn == "dense":
+        h = L.norm_apply(cfg, p["ffn_norm"], x)
+        x = x + L.mlp_apply(cfg, p["ffn"], h)
+    elif ffn == "moe":
+        h = L.norm_apply(cfg, p["ffn_norm"], x)
+        y, _ = _moe_apply(cfg, p["ffn"], h, dist)
+        x = x + y
+    return x, cache
+
+
+def _layer_prefill(cfg: ModelConfig, spec, p, x, cache, start=None,
+                   pad_mask=None, dist=None):
+    """Full-sequence layer forward that writes the decode cache through.
+    Returns (x [B, S, D], new per-layer cache at pos=S)."""
+    mixer, ffn = spec
+    if mixer == "attn":
+        h = L.norm_apply(cfg, p["mixer_norm"], x)
+        y, cache = attention.prefill_step(cfg, p["mixer"], h, cache,
+                                          start=start)
+        x = x + y
+    elif mixer == "ssm":
+        h = L.norm_apply(cfg, p["mixer_norm"], x)
+        y, cache = ssm.prefill_step(cfg, p["mixer"], h, cache, mask=pad_mask)
         x = x + y
     if ffn == "dense":
         h = L.norm_apply(cfg, p["ffn_norm"], x)
@@ -141,33 +168,100 @@ class Model:
     # .. full-sequence forward (train / prefill) ..
     def apply(self, params, tokens=None, embeds=None, labels=None,
               remat: str = "none", last_only: bool = False,
-              fused_loss: bool = False):
+              fused_loss: bool = False, cache=None, write_cache: bool = False,
+              pad_mask=None):
+        """Full-sequence forward.
+
+        ``write_cache=True`` turns this into the batched serving prefill:
+        ``cache`` (from :meth:`init_cache`) is written through — every
+        attention layer stores the prompt's rotated K/V, every SSM layer
+        its conv window and final SSD state — and the populated cache
+        (``pos`` advanced by S) is returned under ``out["cache"]``.  The
+        per-layer math mirrors ``decode_step`` exactly, so the logits and
+        cache are bit-identical to stepping the prompt token by token.
+
+        ``pad_mask`` ([B, S] bool, True = real token) supports ragged
+        batches via LEFT padding: pad columns are masked out of attention
+        (and frozen out of SSM state), and RoPE positions count from each
+        sequence's first real token.
+        """
         cfg = self.cfg
+        if write_cache and cache is None:
+            raise ValueError("write_cache=True requires a cache from "
+                             "init_cache(batch, max_len)")
+        if write_cache and not isinstance(cache["pos"], jax.core.Tracer):
+            # prefill writes K/V at slots 0..S-1: a cache that has already
+            # advanced would be silently clobbered (chunked prefill is a
+            # ROADMAP item, not supported yet).  Best-effort check — a
+            # traced pos (cache passed as a jit argument) can't be read.
+            import numpy as np
+            if np.any(np.asarray(cache["pos"]) != 0):
+                raise ValueError(
+                    "write_cache prefill requires a fresh cache (pos == 0); "
+                    f"got pos={np.asarray(cache['pos'])}")
         if embeds is None:
             x = L.embed_apply(cfg, params["embed"], tokens)
         else:
             x = embeds.astype(L.cdtype(cfg))
         x = self._constrain(x)
 
-        def group_body(x, gparams):
-            aux_total = jnp.zeros((), jnp.float32)
-            for i, spec in enumerate(cfg.group):
-                x, aux = _layer_apply(cfg, spec, gparams[i], x, self.dist)
-                aux_total += aux
-            return self._constrain(x), aux_total
+        if write_cache:
+            s = x.shape[1]
+            start = None
+            if pad_mask is not None:
+                start = (s - jnp.sum(pad_mask.astype(jnp.int32), axis=1))
 
-        if remat == "full":
-            group_body = jax.checkpoint(group_body)
-        elif remat == "dots":
-            group_body = jax.checkpoint(
-                group_body,
-                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
-        x, auxes = jax.lax.scan(group_body, x, params["groups"],
-                                unroll=self.cfg.num_groups if self.scan_unroll else 1)
+            def group_body(carry, scan_in):
+                x, full_cache = carry
+                gparams, g = scan_in
+                gcache = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, g, 0,
+                                                           keepdims=False),
+                    full_cache)
+                new_caches = []
+                for i, spec in enumerate(cfg.group):
+                    x, c = _layer_prefill(cfg, spec, gparams[i], x, gcache[i],
+                                          start, pad_mask, self.dist)
+                    new_caches.append(c)
+                full_cache = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new.astype(full.dtype), g, 0),
+                    full_cache, tuple(new_caches))
+                return (self._constrain(x), full_cache), None
+
+            (x, new_layers), _ = jax.lax.scan(
+                group_body, (x, cache["layers"]),
+                (params["groups"], jnp.arange(cfg.num_groups)))
+            auxes = jnp.zeros((1,), jnp.float32)
+            new_cache = dict(cache)
+            new_cache["layers"] = new_layers
+            new_cache["pos"] = cache["pos"] + s
+            if start is not None:
+                new_cache["start"] = start.astype(jnp.int32)
+        else:
+            new_cache = None
+
+            def group_body(x, gparams):
+                aux_total = jnp.zeros((), jnp.float32)
+                for i, spec in enumerate(cfg.group):
+                    x, aux = _layer_apply(cfg, spec, gparams[i], x, self.dist)
+                    aux_total += aux
+                return self._constrain(x), aux_total
+
+            if remat == "full":
+                group_body = jax.checkpoint(group_body)
+            elif remat == "dots":
+                group_body = jax.checkpoint(
+                    group_body,
+                    policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+            x, auxes = jax.lax.scan(group_body, x, params["groups"],
+                                    unroll=self.cfg.num_groups if self.scan_unroll else 1)
         if last_only:   # prefill serving: only the last position's logits
             x = x[:, -1:, :]
         x = L.norm_apply(cfg, params["final_norm"], x)
         out = {"aux_loss": jnp.sum(auxes)}
+        if new_cache is not None:
+            out["cache"] = new_cache
         head = params.get("lm_head")
         if fused_loss:
             # never materializes [B, S, V] logits (chunked + remat)
@@ -217,11 +311,22 @@ class Model:
             "pos": jnp.zeros((), jnp.int32),
         }
 
-    def decode_step(self, params, cache, tokens=None, embeds=None):
+    def decode_step(self, params, cache, tokens=None, embeds=None,
+                    token_mask=None):
         """One token for the whole batch.  tokens: [B] int32 (or embeds
-        [B, 1, D]).  Returns (logits [B, V], new cache)."""
+        [B, 1, D]).  Returns (logits [B, V], new cache).
+
+        ``cache["pos"]`` may be a scalar (the whole batch at one depth)
+        or a per-sequence [B] vector (continuous batching: each serving
+        slot at its own depth).  An optional ``cache["start"]`` ([B]
+        int32, written by the ragged prefill) marks left-pad slots that
+        stay masked out of attention; ``token_mask`` ([B] bool) marks the
+        CURRENT token as a pad (sequential prefill of ragged batches) so
+        SSM layers carry their state through unchanged.
+        """
         cfg = self.cfg
         pos = cache["pos"]
+        start = cache.get("start")
         if embeds is None:
             x = L.embed_apply(cfg, params["embed"], tokens[:, None])
         else:
@@ -240,7 +345,7 @@ class Model:
             new_caches = []
             for i, spec in enumerate(cfg.group):
                 x, c = _layer_decode(cfg, spec, gparams[i], x, gcache[i], pos,
-                                     self.dist)
+                                     self.dist, start, token_mask)
                 new_caches.append(c)
             full_cache = jax.tree.map(
                 lambda full, new: jax.lax.dynamic_update_index_in_dim(
@@ -253,7 +358,18 @@ class Model:
             (params["groups"], jnp.arange(cfg.num_groups)))
         x = L.norm_apply(cfg, params["final_norm"], x)
         logits = L.lm_head_apply(cfg, params.get("lm_head"), params["embed"], x)
-        return logits[:, 0], {"layers": new_layer_caches, "pos": pos + 1}
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_caches
+        new_cache["pos"] = pos + 1
+        return logits[:, 0], new_cache
+
+    def prefill(self, params, cache, tokens=None, embeds=None, pad_mask=None):
+        """Batched serving prefill: one forward pass that populates the
+        decode cache.  Returns (last-token logits [B, V], cache at
+        pos=S0) — exactly what the first decode step needs."""
+        out = self.apply(params, tokens=tokens, embeds=embeds, cache=cache,
+                         write_cache=True, last_only=True, pad_mask=pad_mask)
+        return out["logits"][:, 0], out["cache"]
 
 
 def build_model(cfg: ModelConfig, **kw) -> Model:

@@ -1,15 +1,35 @@
-"""Serving steps: prefill a batch of prompts, then batched decode.
+"""Serving engine: batched prefill, decode steps, continuous batching.
 
-``make_serve_step`` returns the one-token decode function the decode_*
-and long_* dry-run cells lower; ``generate`` is the end-to-end loop used
-by examples and tests (greedy or temperature sampling).
+Three layers, bottom-up:
+
+- ``make_prefill_step`` / ``make_serve_step``: the single jitted
+  functions the decode_* and long_* dry-run cells lower;
+- ``generate``: the end-to-end loop used by examples and tests.  The
+  prompt is prefilled in ONE ``model.apply`` forward pass that writes the
+  KV/SSM caches through (bit-identical to stepping it token by token —
+  asserted in tests), with left-padding + attention masking for ragged
+  prompt batches and per-sequence EOS early-stop;
+- ``ServeEngine``: a fixed-slot continuous-batching engine.  Requests are
+  admitted into free batch slots by prefilling the newcomer while the
+  other slots keep decoding; finished slots are refilled from the queue.
+
+With EN-T quantized params every projection in every one of these paths
+runs the FUSED packed-plane matmul (repro.quant.qdense_apply): per-row
+activation quant happens inside the kernel against the [2, K, N] packed
+planes, so batched decode never materializes int8 activations in HBM and
+issues 2 plane matmuls per layer instead of 4.
 """
 
 from __future__ import annotations
 
+from collections import deque
+from dataclasses import dataclass, field
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.models import attention
 from repro.models.transformer import Model
 
 
@@ -26,12 +46,6 @@ def make_prefill_step(model: Model):
 def make_serve_step(model: Model, *, donate_cache: bool | None = None):
     """(params, cache, tokens[B]) -> (logits [B, V], cache) — one token.
 
-    With EN-T quantized params every projection in this step runs the
-    FUSED packed-plane matmul (repro.quant.qdense_apply): per-row
-    activation quant happens inside the kernel against the [2, K, N]
-    packed planes — batched decode never materializes int8 activations
-    in HBM and issues 2 plane matmuls per layer instead of 4.
-
     ``donate_cache`` donates the KV cache buffers to the jitted step so
     decode updates happen in place (defaults to on for TPU, where buffer
     donation is supported; harmless elsewhere but noisy).
@@ -45,23 +59,80 @@ def make_serve_step(model: Model, *, donate_cache: bool | None = None):
     return jax.jit(serve_step, donate_argnums=(1,) if donate_cache else ())
 
 
+def _pad_mask_from_lens(prompt_lens, b: int, s0: int):
+    """[B] real-token counts -> (left-pad mask [B, S0], start [B])."""
+    lens = jnp.asarray(prompt_lens, jnp.int32)
+    if lens.shape != (b,):
+        raise ValueError(f"prompt_lens must have shape ({b},), got {lens.shape}")
+    lens_np = np.asarray(lens)
+    if (lens_np < 1).any() or (lens_np > s0).any():
+        raise ValueError(f"prompt_lens must be in [1, {s0}], got {lens_np}")
+    mask = jnp.arange(s0)[None, :] >= (s0 - lens[:, None])
+    return mask, (s0 - lens).astype(jnp.int32)
+
+
 def generate(model: Model, params, prompt_tokens, steps: int, *,
-             temperature: float = 0.0, key=None, max_len: int | None = None):
-    """Greedy/temperature generation.  prompt_tokens: [B, S0] int32."""
+             temperature: float = 0.0, key=None, max_len: int | None = None,
+             eos_id: int | None = None, pad_id: int = 0, prompt_lens=None,
+             prefill: str = "batched"):
+    """Greedy/temperature generation on top of the batched prefill.
+
+    prompt_tokens: [B, S0] int32, LEFT-padded when ragged (``prompt_lens``
+    [B] gives each row's real-token count; real tokens occupy the last
+    ``prompt_lens[b]`` columns).  Returns [B, steps] int32; rows that hit
+    ``eos_id`` emit it and then ``pad_id`` for the remaining columns, and
+    the loop stops early once every row is done.
+
+    ``prefill`` selects "batched" (one model.apply forward pass with cache
+    write-through — the fast path) or "sequential" (token-by-token decode
+    steps; the reference path the equivalence tests compare against).
+    Batched prefill falls back to sequential when a sliding-window ring
+    buffer would wrap mid-prompt (S0 > window).
+    """
+    prompt_tokens = jnp.asarray(prompt_tokens, jnp.int32)
+    if prompt_tokens.ndim != 2 or 0 in prompt_tokens.shape:
+        raise ValueError(
+            "prompt_tokens must be [B, S0] with B >= 1 and S0 >= 1 (empty "
+            f"prompts cannot be prefilled); got shape {prompt_tokens.shape}")
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    if prefill not in ("batched", "sequential"):
+        raise ValueError(f"unknown prefill mode {prefill!r}")
     b, s0 = prompt_tokens.shape
+    if temperature > 0 and key is None:
+        key = jax.random.PRNGKey(0)
     max_len = max_len or (s0 + steps)
+
+    mask = start = None
+    if prompt_lens is not None:
+        mask, start = _pad_mask_from_lens(prompt_lens, b, s0)
+
     cache = model.init_cache(b, max_len)
+    if start is not None:
+        cache["start"] = start
     step = make_serve_step(model)
 
-    # prefill token-by-token through the decode path (exactness over speed
-    # on CPU; TPU serving prefills via model.apply + cache write-through)
-    logits = None
-    for t in range(s0):
-        logits, cache = step(params, cache, prompt_tokens[:, t])
+    if prefill == "batched" and s0 > attention.cache_len(model.cfg, max_len):
+        prefill = "sequential"   # ring buffer wraps mid-prompt
+    if prefill == "batched":
+        logits, cache = model.prefill(params, cache,
+                                      tokens=prompt_tokens, pad_mask=mask)
+    else:
+        logits = None
+        if mask is None:
+            for t in range(s0):
+                logits, cache = step(params, cache, prompt_tokens[:, t])
+        else:
+            sstep = jax.jit(lambda p, c, t, m: model.decode_step(
+                p, c, tokens=t, token_mask=m))
+            for t in range(s0):
+                logits, cache = sstep(params, cache, prompt_tokens[:, t],
+                                      mask[:, t])
 
     outs = []
+    done = jnp.zeros((b,), bool)
     tok = None
-    for i in range(steps):
+    for _ in range(steps):
         if tok is not None:
             logits, cache = step(params, cache, tok)
         if temperature > 0:
@@ -70,5 +141,176 @@ def generate(model: Model, params, prompt_tokens, steps: int, *,
         else:
             tok = jnp.argmax(logits, axis=-1)
         tok = tok.astype(jnp.int32)
+        if eos_id is not None:
+            tok = jnp.where(done, pad_id, tok)
+            done = done | (tok == eos_id)
         outs.append(tok)
-    return jnp.stack(outs, axis=1)
+        if eos_id is not None and bool(done.all()):
+            break
+    out = jnp.stack(outs, axis=1)
+    if out.shape[1] < steps:   # early EOS stop: keep the [B, steps] contract
+        out = jnp.pad(out, ((0, 0), (0, steps - out.shape[1])),
+                      constant_values=pad_id)
+    return out
+
+
+# --- continuous-batching engine ----------------------------------------------
+
+def _bucket(n: int, lo: int) -> int:
+    """Round a prompt length up to a power of two (>= lo) so prefill jits
+    once per bucket instead of once per length."""
+    b = max(lo, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass
+class Request:
+    """One serving request; ``tokens`` is the raw (unpadded) prompt."""
+    uid: int
+    tokens: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+
+
+@dataclass
+class _SlotState:
+    req: Request
+    emitted: list[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    """Fixed-slot continuous-batching serving engine.
+
+    The engine keeps one [slots, max_len] decode cache with PER-SLOT
+    positions and pad offsets (``cache["pos"]``/``cache["start"]`` are [B]
+    vectors).  Each ``step()`` tick first admits queued requests into free
+    slots — the newcomer's prompt is prefilled in one batched forward pass
+    (bucketed to a power-of-two length, left-padded + masked) and its
+    populated cache row is spliced into the batch cache — then runs ONE
+    batched decode step for every slot.  A slot is freed on EOS or
+    ``max_new_tokens`` and immediately becomes refillable, so long and
+    short requests share the batch without barriers (continuous batching).
+
+    ``on_token(uid, token, done)`` streams tokens as they are sampled.
+    """
+
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 128, eos_id: int | None = None,
+                 pad_id: int = 0, prefill_bucket: int = 8, seed: int = 0,
+                 on_token=None):
+        if slots < 1:
+            raise ValueError(f"ServeEngine needs at least one slot, got {slots}")
+        if model.cfg.sliding_window and model.cfg.sliding_window < max_len:
+            raise ValueError(
+                "ServeEngine slots track absolute cache positions and do "
+                "not support sliding-window ring buffers yet")
+        self.model, self.params = model, params
+        self.slots, self.max_len = slots, max_len
+        self.eos_id, self.pad_id = eos_id, pad_id
+        self.prefill_bucket = prefill_bucket
+        self.on_token = on_token
+        cache = model.init_cache(slots, max_len)
+        cache["pos"] = jnp.zeros((slots,), jnp.int32)
+        cache["start"] = jnp.zeros((slots,), jnp.int32)
+        self.cache = cache
+        self._decode = make_serve_step(model)
+        self._splice = jax.jit(
+            lambda full, new, slot: jax.tree.map(
+                lambda f, n: jax.lax.dynamic_update_slice_in_dim(
+                    f, n.astype(f.dtype), slot, 1), full, new))
+
+        def _prefill_one(params, toks, mask):
+            c = model.init_cache(1, max_len)
+            return model.prefill(params, c, tokens=toks, pad_mask=mask)
+
+        # jit's own shape-keyed cache compiles once per length bucket
+        self._prefill = jax.jit(_prefill_one)
+        self._queue: deque[Request] = deque()
+        self._free = list(range(slots))
+        self._active: dict[int, _SlotState] = {}
+        self._next_tok = np.full((slots,), pad_id, np.int32)
+        self._results: dict[int, list[int]] = {}
+        self._key = jax.random.PRNGKey(seed)
+        self._next_uid = 0
+
+    # .. request intake ..
+    def submit(self, tokens, *, max_new_tokens: int = 32,
+               temperature: float = 0.0) -> int:
+        tokens = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        if not tokens:
+            raise ValueError("cannot serve an empty prompt")
+        if _bucket(len(tokens), self.prefill_bucket) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({len(tokens)} tokens, bucketed) + max_new_tokens "
+                f"({max_new_tokens}) exceeds engine max_len {self.max_len}")
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append(Request(uid, tokens, max_new_tokens, temperature))
+        return uid
+
+    # .. internals ..
+    def _sample(self, logits_row, temperature: float) -> int:
+        if temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            return int(jax.random.categorical(
+                sub, jnp.asarray(logits_row) / temperature))
+        return int(np.argmax(logits_row))
+
+    def _emit(self, slot: int, tok: int) -> bool:
+        """Record one sampled token; returns True if the request finished."""
+        st = self._active[slot]
+        st.emitted.append(tok)
+        done = (tok == self.eos_id if self.eos_id is not None else False)
+        done = done or len(st.emitted) >= st.req.max_new_tokens
+        done = done or int(self.cache["pos"][slot]) >= self.max_len - 1
+        if self.on_token is not None:
+            self.on_token(st.req.uid, tok, done)
+        if done:
+            self._results[st.req.uid] = st.emitted
+            del self._active[slot]
+            self._free.append(slot)
+            self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+            self.cache["start"] = self.cache["start"].at[slot].set(0)
+        else:
+            self._next_tok[slot] = tok
+        return done
+
+    def _admit(self):
+        while self._queue and self._free:
+            req = self._queue.popleft()
+            slot = self._free.pop()
+            n = len(req.tokens)
+            sp = _bucket(n, self.prefill_bucket)
+            toks = jnp.asarray([[self.pad_id] * (sp - n) + req.tokens],
+                               jnp.int32)
+            mask, _ = _pad_mask_from_lens([n], 1, sp)
+            logits, c1 = self._prefill(self.params, toks, mask)
+            self.cache["layers"] = self._splice(
+                self.cache["layers"], c1["layers"], slot)
+            self.cache["pos"] = self.cache["pos"].at[slot].set(sp)
+            self.cache["start"] = self.cache["start"].at[slot].set(sp - n)
+            self._active[slot] = _SlotState(req)
+            self._emit(slot, self._sample(logits[0], req.temperature))
+
+    # .. driving ..
+    def step(self) -> bool:
+        """Admit newcomers, then one batched decode tick for every active
+        slot.  Returns True while there is (or will be) work left."""
+        self._admit()
+        if not self._active:
+            return bool(self._queue)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self._next_tok))
+        logits = np.asarray(logits)
+        for slot in list(self._active):
+            st = self._active[slot]
+            self._emit(slot, self._sample(logits[slot], st.req.temperature))
+        return bool(self._active or self._queue)
+
+    def run(self) -> dict[int, list[int]]:
+        """Drive until queue and slots drain; returns {uid: emitted tokens}."""
+        while self.step():
+            pass
+        return dict(self._results)

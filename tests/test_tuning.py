@@ -68,6 +68,59 @@ class TestTableAndCache:
         assert cfg["block_m"] == 128  # None override ignored -> heuristic
 
 
+class TestCacheRobustness:
+    """The persistent cache must survive concurrent writers and corrupt
+    files: _save is write-temp + atomic rename, _load tolerates garbage."""
+
+    def test_corrupt_cache_tolerated_and_overwritten(self):
+        import os
+        path = tuning.cache_path()
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write('{"int8_matmul:128x512x512": {"block_m"')  # truncated
+        tuning._LOADED = False
+        cfg = tuning.get_block_config("ent_matmul", (256, 1024, 1024))
+        assert cfg["block_m"] == 128  # heuristic fallback, no raise
+        tuning.record("ent_matmul", (256, 1024, 1024), {"block_m": 64})
+        with open(path) as f:
+            assert json.load(f)["ent_matmul:256x1024x1024"] == {"block_m": 64}
+
+    def test_non_dict_payload_tolerated(self):
+        import os
+        path = tuning.cache_path()
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        for payload in ("[1, 2, 3]", '"scalar"', "null"):
+            with open(path, "w") as f:
+                f.write(payload)
+            tuning._LOADED = False
+            tuning._TABLE.clear()
+            cfg = tuning.get_block_config("ent_matmul", (128, 512, 512))
+            assert cfg  # heuristics served, no raise
+
+    def test_non_dict_entries_dropped(self):
+        import os
+        path = tuning.cache_path()
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"ent_matmul:128x512x512": "bogus",
+                       "int8_matmul:128x512x512": {"block_k": 256}}, f)
+        tuning._LOADED = False
+        tuning._TABLE.clear()
+        assert tuning.get_block_config(
+            "int8_matmul", (128, 512, 512))["block_k"] == 256
+        # the bogus entry fell back to heuristics instead of crashing
+        assert "block_m" in tuning.get_block_config("ent_matmul", (128, 512, 512))
+
+    def test_save_is_atomic_no_temp_left_behind(self):
+        import glob
+        import os
+        tuning.record("ent_matmul", (64, 256, 256), {"block_m": 64})
+        d = os.path.dirname(tuning.cache_path())
+        assert not glob.glob(os.path.join(d, "*.tmp"))
+        with open(tuning.cache_path()) as f:
+            json.load(f)  # valid, complete JSON
+
+
 class TestAutotune:
     def test_picks_fastest_and_caches(self):
         calls = []
