@@ -7,6 +7,16 @@ quantization) applied to the same lower+compile+roofline pipeline as the
 baseline, so before/after numbers are directly comparable.
 
     PYTHONPATH=src python -m benchmarks.hillclimb --cell mamba2 [--variant X]
+
+``--tune-kernels`` instead hill-climbs the Pallas kernel block tables:
+every (family, serving shape) pair sweeps its divisibility-filtered
+candidate grid through ``tuning.autotune``, and the winners persist in
+the shared shape-keyed JSON cache (``~/.cache/repro/tuning.json``,
+override with ``REPRO_TUNING_CACHE``) that ``int8_matmul`` / ``ent_*`` /
+``flash_attention`` launches consult — so one sweep per machine warms
+every later serving process.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --tune-kernels [--quick]
 """
 
 import os
@@ -89,12 +99,108 @@ def _transform(name):
     raise KeyError(name)
 
 
+# --- kernel block-table autotuning -------------------------------------------
+
+# the serving shapes that matter: decode (skinny M / Sq=1 suffix), the
+# canonical M=256 engine matmul, and a 1k prefill tile
+TUNE_MATMUL_SHAPES = [(8, 1024, 1024), (256, 1024, 1024), (1024, 4096, 1024)]
+TUNE_ATTENTION_SHAPES = [(256, 256, 64), (1024, 1024, 64)]
+
+
+def tune_kernels(quick: bool = False) -> dict:
+    """Sweep the shared block tables via ``tuning.autotune`` and persist.
+
+    On TPU the real Pallas kernels are measured; elsewhere they run in
+    interpret mode (slow but faithful tiling), so ``--quick`` trims the
+    candidate grids and shapes for smoke coverage.
+    """
+    import jax
+
+    from repro.kernels import tuning
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+    from repro.kernels.int8_matmul.int8_matmul import int8_matmul
+
+    import numpy as np
+    import jax.numpy as jnp
+
+    interpret = jax.default_backend() != "tpu"
+    iters, warmup = (1, 1) if interpret else (5, 2)
+    rng = np.random.default_rng(0)
+    results = {}
+
+    mm_shapes = [(64, 256, 256)] if quick else TUNE_MATMUL_SHAPES
+    at_shapes = [(128, 128, 64)] if quick else TUNE_ATTENTION_SHAPES
+
+    for m, k, n in mm_shapes:
+        x = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+        w = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+        sx = jnp.ones((m, 1), jnp.float32)
+        sw = jnp.ones((1, n), jnp.float32)
+        cands = tuning.matmul_candidates(m, k, n)
+        if quick:
+            cands = cands[:4]
+
+        def bench_int8(cfg):
+            jax.block_until_ready(int8_matmul(
+                x, w, sx, sw, out_dtype=jnp.float32, interpret=interpret,
+                **cfg))
+
+        best = tuning.autotune("int8_matmul", (m, k, n), bench_int8, cands,
+                               iters=iters, warmup=warmup)
+        results[f"int8_matmul:{m}x{k}x{n}"] = best
+
+        from repro.core.multiplier import ent_packed_planes
+        from repro.kernels.ent_matmul.ent_matmul import ent_matmul_packed
+        packed = ent_packed_planes(w)
+
+        def bench_ent(cfg):
+            jax.block_until_ready(ent_matmul_packed(
+                x, packed, sx, sw, out_dtype=jnp.float32,
+                interpret=interpret, **cfg))
+
+        best = tuning.autotune("ent_matmul", (m, k, n), bench_ent, cands,
+                               iters=iters, warmup=warmup)
+        results[f"ent_matmul:{m}x{k}x{n}"] = best
+
+    for sq, skv, d in at_shapes:
+        q = jnp.asarray(rng.normal(size=(1, 8, sq, d)).astype(np.float32))
+        kv = jnp.asarray(rng.normal(size=(1, 2, skv, d)).astype(np.float32))
+        cands = tuning.attention_candidates(sq, skv)
+        if quick:
+            cands = cands[:4]
+
+        def bench_flash(cfg):
+            jax.block_until_ready(flash_attention(
+                q, kv, kv, causal=True, interpret=interpret, **cfg))
+
+        best = tuning.autotune("flash_attention", (sq, skv, d), bench_flash,
+                               cands, iters=iters, warmup=warmup)
+        results[f"flash_attention:{sq}x{skv}x{d}"] = best
+
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", choices=tuple(EXPERIMENTS), required=True)
+    ap.add_argument("--cell", choices=tuple(EXPERIMENTS))
     ap.add_argument("--variant", default=None)
     ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--tune-kernels", action="store_true",
+                    help="autotune the shared Pallas block tables instead "
+                         "of running a cell experiment")
+    ap.add_argument("--quick", action="store_true",
+                    help="trimmed candidate grids (CI smoke)")
     args = ap.parse_args()
+
+    if args.tune_kernels:
+        from repro.kernels import tuning
+        results = tune_kernels(quick=args.quick)
+        for key, cfg in sorted(results.items()):
+            print(f"{key}: {cfg}")
+        print(f"persisted to {tuning.cache_path()}")
+        return
+    if args.cell is None:
+        ap.error("--cell is required unless --tune-kernels is given")
 
     from repro.launch.dryrun import run_cell
     arch, shape, variants = EXPERIMENTS[args.cell]

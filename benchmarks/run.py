@@ -2,7 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract,
 then the full model-vs-paper tables.  ``python -m benchmarks.run``
-(``--json-only`` runs just the kernel benches + JSON record, for CI).
+(``--json-only`` runs just the kernel benches + JSON record, for CI;
+``--quick`` additionally shrinks the serving loop for smoke runs while
+keeping the canonical flash-prefill shape).
 
 Also writes ``BENCH_ent_matmul.json`` — a machine-readable record of the
 EN-T serving-matmul variants at the canonical M=256, K=N=1024 shape so
@@ -14,8 +16,12 @@ the perf trajectory is tracked across PRs:
     ent_packed_fused     packed planes + fused in-kernel activation quant
                          (the serving default; quant never round-trips HBM)
 
-and, under ``"serving"``, the engine-path throughputs: batched one-pass
-prefill vs the seed's token-by-token prefill, and steady-state decode.
+plus, under ``"serving"``, the engine-path throughputs (batched one-pass
+prefill vs the seed's token-by-token prefill, steady-state decode, and
+decode+on-device-sample engine ticks); under ``"flash_prefill"``, the
+masked flash-attention prefill vs the deleted dense-einsum path at
+S0=256; and under ``"sampler"``, the batched single-dispatch sampler vs
+the per-slot host sampling loop it replaced.
 """
 
 from __future__ import annotations
@@ -118,12 +124,14 @@ def serving_benches(s0=64, batch=4, decode_steps=16):
 
     Measures the batched one-forward-pass prefill (model.apply cache
     write-through) against the seed's token-by-token decode prefill at
-    the same [batch, s0] prompt, plus steady-state batched decode.
-    Returns (csv_rows, record) — the record lands in
+    the same [batch, s0] prompt, steady-state batched decode, and the
+    full engine tick (decode + on-device batched sample, one [B] token
+    transfer).  Returns (csv_rows, record) — the record lands in
     BENCH_ent_matmul.json under "serving" to track the trajectory per PR.
     """
     from repro.configs import get_config, reduced_config
     from repro.models.transformer import build_model
+    from repro.runtime import sampling
     from repro.runtime.serve_loop import make_serve_step
 
     cfg = reduced_config(get_config("qwen2.5-3b"))
@@ -155,7 +163,7 @@ def serving_benches(s0=64, batch=4, decode_steps=16):
     t_seq = timed(seq_prefill)
     t_bat = timed(lambda: pf(params, prompts))
 
-    _, cache0 = pf(params, prompts)
+    logits0, cache0 = pf(params, prompts)
     tok0 = jnp.zeros((batch,), jnp.int32)
 
     def decode_run():
@@ -167,6 +175,22 @@ def serving_benches(s0=64, batch=4, decode_steps=16):
 
     t_dec = timed(decode_run) / decode_steps
 
+    # the engine tick: batched decode + batched ON-DEVICE sample — one
+    # device dispatch pair per step, [B] int32 back (never [B, V] logits)
+    sampler = sampling.make_sampler(top_k=None, top_p=None)
+    keys0 = sampling.init_keys(0, batch)
+    temp = jnp.full((batch,), 0.8, jnp.float32)
+
+    def sampled_decode_run():
+        cache, keys = cache0, keys0
+        tok, keys = sampler(logits0, keys, temp)
+        for _ in range(decode_steps):
+            logits, cache = step(params, cache, tok)
+            tok, keys = sampler(logits, keys, temp)
+        return tok
+
+    t_sdec = timed(sampled_decode_run) / decode_steps
+
     ptoks = batch * s0
     rows = [
         (f"serve_prefill_seq_{batch}x{s0}", t_seq * 1e6,
@@ -175,6 +199,8 @@ def serving_benches(s0=64, batch=4, decode_steps=16):
          "one-pass model.apply cache write-through"),
         (f"serve_decode_step_b{batch}", t_dec * 1e6,
          "steady-state batched decode step"),
+        (f"serve_decode_sampled_b{batch}", t_sdec * 1e6,
+         "engine tick: decode + on-device batched sample"),
     ]
     record = {
         "s0": s0, "batch": batch, "backend": jax.default_backend(),
@@ -182,20 +208,154 @@ def serving_benches(s0=64, batch=4, decode_steps=16):
         "prefill_tok_s_batched": round(ptoks / t_bat, 1),
         "prefill_speedup_batched_vs_sequential": round(t_seq / t_bat, 2),
         "decode_tok_s": round(batch / t_dec, 1),
+        "decode_sampled_tok_s": round(batch / t_sdec, 1),
     }
     return rows, record
 
 
-def kernel_benches():
+def flash_prefill_benches(s0=256, batch=4, heads=8, kv_heads=2, head_dim=64):
+    """Masked flash prefill vs the deleted dense-einsum path, op level.
+
+    The einsum arm is a faithful port of the PR2 ``prefill_step``
+    attention (cache write + read-back slice, [B, S, H, G, W] scores
+    with -1e30 masking, softmax, pad-row zeroing); the flash arm is the
+    ``masked_attention`` op that replaced it (same cache write, blocked
+    online-softmax oracle on CPU / Pallas kernel on TPU, fresh-operand
+    attention with no read-back).  Both jitted, same [B, S0] prompt.
+    """
+    from repro.kernels.flash_attention import ops as attn_ops
+
+    b, hq, hkv, hd = batch, heads, kv_heads, head_dim
+    w, group = s0 + 64, heads // kv_heads
+    rng = np.random.default_rng(0)
+    q4 = jnp.asarray(rng.normal(size=(b, s0, hq, hd)).astype(np.float32))
+    k4 = jnp.asarray(rng.normal(size=(b, s0, hkv, hd)).astype(np.float32))
+    v4 = jnp.asarray(rng.normal(size=(b, s0, hkv, hd)).astype(np.float32))
+    cache_k = jnp.zeros((b, w, hkv, hd), jnp.float32)
+    cache_v = jnp.zeros((b, w, hkv, hd), jnp.float32)
+    start = jnp.zeros((b,), jnp.int32)
+
+    @jax.jit
+    def einsum_prefill(q, k, v):
+        ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k, 0, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v, 0, 1)
+        cols = jnp.arange(s0, dtype=jnp.int32)
+        idx = jnp.arange(s0)
+        valid = ((idx[None, None, :] <= cols[None, :, None])
+                 & (idx[None, None, :] >= start[:, None, None]))
+        qh = q.reshape(b, s0, hkv, group, hd)
+        sc = jnp.einsum("bqhgd,bwhd->bqhgw", qh, ck[:, :s0],
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+        sc = jnp.where(valid[:, :, None, None, :], sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        p = p * jnp.any(valid, -1)[:, :, None, None, None].astype(jnp.float32)
+        out = jnp.einsum("bqhgw,bwhd->bqhgd", p, cv[:, :s0],
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, s0, hq * hd), ck, cv
+
+    @jax.jit
+    def flash_prefill(q, k, v):
+        ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k, 0, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v, 0, 1)
+        out = attn_ops.masked_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), start=start)
+        return out.transpose(0, 2, 1, 3).reshape(b, s0, hq * hd), ck, cv
+
+    # best-of-3: the two arms run back to back, so transient machine load
+    # would otherwise skew the recorded ratio either way
+    t_e = min(_time_us(einsum_prefill, q4, k4, v4, iters=10)
+              for _ in range(3))
+    t_f = min(_time_us(flash_prefill, q4, k4, v4, iters=10)
+              for _ in range(3))
+    ptoks = b * s0
+    rows = [
+        (f"prefill_attn_einsum_{b}x{s0}", t_e, "deleted dense-einsum path"),
+        (f"prefill_attn_flash_{b}x{s0}", t_f, "masked flash prefill op"),
+    ]
+    record = {
+        "s0": s0, "batch": b, "heads": hq, "kv_heads": hkv,
+        "head_dim": hd, "backend": jax.default_backend(),
+        "prefill_tok_s_einsum": round(ptoks / (t_e * 1e-6), 1),
+        "prefill_tok_s_flash": round(ptoks / (t_f * 1e-6), 1),
+        "speedup_flash_vs_einsum": round(t_e / t_f, 3),
+    }
+    return rows, record
+
+
+def sampler_benches(slots=8, vocab=32768, steps=16):
+    """Batched on-device sampler vs the per-slot host loop it replaced.
+
+    The host arm mimics the PR2 engine at temperature: pull [B, V]
+    logits to the host, then one ``jax.random.categorical`` dispatch per
+    slot — B device round-trips per tick.  The batched arm is ONE jitted
+    dispatch (per-slot temperature vector, per-slot PRNG keys) and a [B]
+    int32 transfer.
+    """
+    from repro.runtime import sampling
+
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(slots, vocab)).astype(np.float32))
+    temps = np.full((slots,), 0.8, np.float32)
+
+    def host_loop():
+        lg = np.asarray(logits)              # [B, V] device->host
+        key = jax.random.PRNGKey(0)
+        toks = []
+        for s in range(slots):
+            key, sub = jax.random.split(key)
+            toks.append(int(jax.random.categorical(
+                sub, jnp.asarray(lg[s]) / temps[s])))
+        return toks
+
+    sampler = sampling.make_sampler(top_k=None, top_p=None)
+    keys0 = sampling.init_keys(0, slots)
+    tdev = jnp.asarray(temps)
+
+    def batched():
+        tok, _ = sampler(logits, keys0, tdev)
+        return np.asarray(tok)               # [B] int32 device->host
+
+    def timed(fn, iters=steps):
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    t_host, t_bat = timed(host_loop), timed(batched)
+    rows = [
+        (f"sampler_host_loop_b{slots}", t_host,
+         "per-slot host sampling (B dispatches + [B, V] transfer)"),
+        (f"sampler_batched_b{slots}", t_bat,
+         "on-device batched sampler (1 dispatch + [B] transfer)"),
+    ]
+    record = {
+        "slots": slots, "vocab": vocab, "backend": jax.default_backend(),
+        "us_host_loop": round(t_host, 2),
+        "us_batched_single_dispatch": round(t_bat, 2),
+        "speedup_batched_vs_host_loop": round(t_host / t_bat, 3),
+    }
+    return rows, record
+
+
+def kernel_benches(quick: bool = False):
     """CPU micro-benches of the core ops (oracle paths; Pallas on TPU)."""
     from repro.kernels.flash_attention.ref import attention_blockwise
     from repro.kernels.ssd_scan.ref import ssd_scan_chunked
 
     rng = np.random.default_rng(0)
     rows, record = ent_matmul_benches()
-    srows, srecord = serving_benches()
+    srows, srecord = serving_benches(
+        **({"s0": 32, "decode_steps": 8} if quick else {}))
     rows += srows
     record["serving"] = srecord
+    frows, frecord = flash_prefill_benches()   # canonical S0=256 even --quick
+    rows += frows
+    record["flash_prefill"] = frecord
+    prows, precord = sampler_benches(vocab=4096 if quick else 32768)
+    rows += prows
+    record["sampler"] = precord
 
     with open("BENCH_ent_matmul.json", "w") as f:
         json.dump(record, f, indent=1)
@@ -217,10 +377,10 @@ def kernel_benches():
 
 def main() -> None:
     print("name,us_per_call,derived")
-    for name, us, derived in kernel_benches():
+    for name, us, derived in kernel_benches(quick="--quick" in sys.argv):
         print(f"{name},{us:.1f},{derived}")
 
-    if "--json-only" in sys.argv:
+    if "--json-only" in sys.argv or "--quick" in sys.argv:
         return
 
     from benchmarks.paper_tables import ALL_TABLES

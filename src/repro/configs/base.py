@@ -53,6 +53,10 @@ class ModelConfig:
     norm_eps: float = 1e-5
     rope_theta: float = 10000.0
     sliding_window: int | None = None
+    # serving: prefill prompts in chunks of this many tokens (None = one
+    # shot up to the KV ring width, then auto-chunk at the ring width);
+    # bounds peak prefill activation memory at O(chunk * window)
+    prefill_chunk: int | None = None
     tie_embeddings: bool = False
     moe: MoEConfig | None = None
     ssm: SSMConfig | None = None

@@ -8,7 +8,11 @@ Supports:
   * causal masking with a query offset (decode: q is the suffix of a
     longer kv stream),
   * sliding-window attention (Mixtral SWA) via ``window``,
-  * GQA: kv heads indexed as q_head // (Hq // Hkv) in the BlockSpec.
+  * GQA: kv heads indexed as q_head // (Hq // Hkv) in the BlockSpec,
+  * ragged serving prefill (``flash_attention_masked``): a per-sequence
+    ``start`` vector rides in as a scalar-prefetch operand and masks
+    left-pad kv columns out of the attention forever; fully-masked query
+    rows (pad-slot queries) emit exact zeros.
 """
 
 from __future__ import annotations
@@ -25,9 +29,14 @@ from repro.kernels._compat import CompilerParams
 _NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            nkv: int, block_q: int, block_kv: int, scale: float,
-            causal: bool, window: int | None, q_offset: int):
+def _kernel(*refs, nkv: int, block_q: int, block_kv: int, scale: float,
+            causal: bool, window: int | None, q_offset: int,
+            has_start: bool):
+    if has_start:
+        start_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        start_ref = None
     ikv = pl.program_id(3)
 
     @pl.when(ikv == 0)
@@ -49,6 +58,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         mask &= kv_pos <= q_pos
     if window is not None:
         mask &= kv_pos > q_pos - window
+    if has_start:
+        mask &= kv_pos >= start_ref[pl.program_id(0)]
     s = jnp.where(mask, s, _NEG_INF)
 
     m_prev = m_ref[...]                                    # [bq, 1]
@@ -65,6 +76,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _finish():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _blocks(sq, skv, d, block_q, block_kv):
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
+    return block_q, block_kv, sq // block_q, skv // block_kv
 
 
 @functools.partial(
@@ -89,10 +107,7 @@ def flash_attention(
     group = hq // hkv
     if scale is None:
         scale = d**-0.5
-    block_q = min(block_q, sq)
-    block_kv = min(block_kv, skv)
-    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
-    nq, nkv = sq // block_q, skv // block_kv
+    block_q, block_kv, nq, nkv = _blocks(sq, skv, d, block_q, block_kv)
     q_offset = skv - sq  # decode: queries are the stream suffix
     grid = (b, hq, nq, nkv)
     kv_spec = pl.BlockSpec(
@@ -100,7 +115,8 @@ def flash_attention(
     return pl.pallas_call(
         functools.partial(
             _kernel, nkv=nkv, block_q=block_q, block_kv=block_kv,
-            scale=scale, causal=causal, window=window, q_offset=q_offset),
+            scale=scale, causal=causal, window=window, q_offset=q_offset,
+            has_start=False),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
@@ -119,3 +135,70 @@ def flash_attention(
         ),
         interpret=interpret,
     )(q, k, v)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("q_offset", "causal", "window", "scale", "block_q",
+                     "block_kv", "interpret"),
+)
+def flash_attention_masked(
+    q: jax.Array,       # [B, Hq, Sq, D]
+    k: jax.Array,       # [B, Hkv, Skv, D]
+    v: jax.Array,       # [B, Hkv, Skv, D]
+    start: jax.Array,   # [B] int32: first attendable kv column per sequence
+    *,
+    q_offset: int = 0,  # q row t sits at kv position q_offset + t
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Ragged serving prefill: flash attention with per-sequence start.
+
+    The ``start`` vector is a scalar-prefetch operand (SMEM), so the
+    mask costs one compare per tile — no [B, Sq, Skv] mask tensor ever
+    exists.  Left-pad query rows (q_pos < start) are fully masked and
+    emit exact zeros, matching the serving oracle.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    block_q, block_kv, nq, nkv = _blocks(sq, skv, d, block_q, block_kv)
+    grid = (b, hq, nq, nkv)
+    kv_spec = pl.BlockSpec(
+        (1, 1, block_kv, d), lambda bi, hi, qi, ki, s_ref: (bi, hi // group, ki, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki, s_ref: (bi, hi, qi, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki, s_ref: (bi, hi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, nkv=nkv, block_q=block_q, block_kv=block_kv,
+            scale=scale, causal=causal, window=window, q_offset=q_offset,
+            has_start=True),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(start.astype(jnp.int32), q, k, v)

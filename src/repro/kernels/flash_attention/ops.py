@@ -3,10 +3,13 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import tuning
-from repro.kernels.flash_attention.flash_attention import flash_attention
-from repro.kernels.flash_attention.ref import attention_blockwise, attention_ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention, flash_attention_masked)
+from repro.kernels.flash_attention.ref import (
+    attention_blockwise, attention_ref, masked_attention_ref)
 
 # sequences at or above this use the O(chunk)-memory blockwise path when
 # the Pallas kernel is unavailable (CPU dry-run / tests)
@@ -31,3 +34,65 @@ def attention(q, k, v, *, causal=True, window=None, scale=None,
         "flash_attention", (q.shape[2], k.shape[2], q.shape[3]), block_kw)
     return flash_attention(q, k, v, causal=causal, window=window, scale=scale,
                            interpret=(use_kernel == "interpret"), **bk)
+
+
+# tuning._valid implements the min-clamp divisibility vetting shared by
+# every kernel family; reuse it rather than growing a second copy
+_tiles_divide = tuning._valid
+
+
+def masked_attention(q, k, v, *, start=None, q_offset=0, causal=True,
+                     window=None, scale=None, k_scale=None, v_scale=None,
+                     valid=None, use_kernel: str = "auto", chunk=None,
+                     **block_kw):
+    """Serving attention: ragged/masked flash with backend dispatch.
+
+    The one entry point behind ``attention.prefill_step`` and
+    ``attention.decode_step`` (the deleted dense-einsum paths).  Shapes
+    follow :func:`attention`: q [B, Hq, Sq, D], k/v [B, Hkv, Skv, D].
+
+    * ``start`` ([B] int32): first attendable kv column per sequence
+      (left padding); ``q_offset``: q row t sits at kv position
+      ``q_offset + t`` (chunked prefill: queries are the stream suffix).
+    * ``valid`` ([B, Sq, Skv] bool): explicit mask override for the
+      ring-buffer decode, whose slot positions are scattered.  Forces
+      the jnp core (a [B, Sq=1, W] mask is decode-sized, not O(S^2)).
+    * ``k_scale``/``v_scale`` ([B, Hkv, Skv] f32): int8-KV dequant
+      scales, folded exactly (K after the dot, V into the
+      probabilities) on the jnp core.  The Pallas kernel consumes
+      pre-dequantized operands instead (atol-level difference, CPU
+      serving parity is what the tests pin).
+
+    Returns [B, Hq, Sq, D] float32.
+    """
+    sq, skv = q.shape[2], k.shape[2]
+    if use_kernel == "auto":
+        use_kernel = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use_kernel in ("pallas", "interpret") and valid is None:
+        bk = tuning.get_block_config(
+            "flash_attention", (sq, skv, q.shape[3]), block_kw)
+        if _tiles_divide("flash_attention", (sq, skv), bk):
+            if k_scale is not None:   # kernel takes dequantized operands
+                k = k.astype(q.dtype) * k_scale[..., None].astype(q.dtype)
+            if v_scale is not None:
+                v = v.astype(q.dtype) * v_scale[..., None].astype(q.dtype)
+            if start is None:
+                start = jnp.zeros((q.shape[0],), jnp.int32)
+            out = flash_attention_masked(
+                q, k, v, start, q_offset=q_offset, causal=causal,
+                window=window, scale=scale,
+                interpret=(use_kernel == "interpret"),
+                **{kk: min(int(vv), (sq if kk == "block_q" else skv))
+                   for kk, vv in bk.items()})
+            return out.astype(jnp.float32)
+    # chunk the kv axis only when the score tile is actually large:
+    # decode (Sq=1) scores are [B, H, 1, W] — chunking there saves no
+    # memory and would unroll W/chunk blocks into the jitted decode step
+    if chunk is None and skv >= BLOCKWISE_THRESHOLD and sq > 1:
+        chunk = BLOCKWISE_THRESHOLD // 2
+    if chunk is not None and skv % chunk:
+        chunk = None   # ragged tail: one block (serving shapes are small)
+    return masked_attention_ref(
+        q, k, v, start=start, q_offset=q_offset, causal=causal, window=window,
+        scale=scale, k_scale=k_scale, v_scale=v_scale, valid=valid,
+        chunk=chunk)

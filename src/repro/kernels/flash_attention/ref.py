@@ -4,6 +4,16 @@
 for small shapes).  ``attention_blockwise`` is the same math with online
 softmax over kv chunks via lax.scan — O(chunk) memory, used as the
 portable long-sequence path (the Pallas kernel's algorithm, in jnp).
+
+``masked_attention_ref`` is the serving core: online-softmax attention
+with per-sequence ``start`` (ragged left-padded batches), a query
+position offset (chunked prefill: queries are a suffix of the kv
+stream), sliding window, optional int8-KV dequant scales folded exactly
+where the einsum path used to fold them, and an optional explicit
+``valid`` mask (ring-buffer decode, where slot positions are scattered).
+``attention.decode_step`` and ``attention.prefill_step`` both run THIS
+function on CPU, which is what keeps batched prefill bit-identical to
+token-by-token decode.
 """
 
 from __future__ import annotations
@@ -87,3 +97,97 @@ def attention_blockwise(q, k, v, *, causal=True, window=None, scale=None,
     (m, l, acc), _ = jax.lax.scan(body, init, (kf, vf, jnp.arange(nkv)))
     out = acc / jnp.maximum(l, 1e-30)
     return out.astype(q.dtype)
+
+
+def masked_attention_ref(q, k, v, *, start=None, q_offset=0, causal=True,
+                         window=None, scale=None, k_scale=None, v_scale=None,
+                         valid=None, chunk=None):
+    """Blocked online-softmax attention with ragged/serving masking.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] (kept in their incoming
+    dtype — dots use ``preferred_element_type=f32`` so int8/bf16 caches
+    are never materialized as f32 copies).  Masking, per kv column j and
+    query row t (local coordinates; q row t sits at position
+    ``q_offset + t``):
+
+      * causal:  j <= q_offset + t
+      * window:  j >  q_offset + t - window
+      * start:   j >= start[b]        (left-pad slots, masked forever)
+      * valid:   [B, Sq, Skv] bool — OVERRIDES the positional masks
+                 (ring-buffer decode reconstructs scattered slot
+                 positions; it can't be expressed as start/len)
+
+    ``k_scale``/``v_scale`` ([B, Hkv, Skv] f32) are int8-KV dequant
+    scales, folded exactly as the einsum path did: K after the q.k dot,
+    V into the probabilities.  Fully-masked rows (pad-slot queries)
+    return exact zeros.  ``chunk`` tiles the kv axis (None = one block);
+    a single block reproduces the dense computation bit-for-bit, which
+    is the configuration the serving parity tests pin.
+
+    Returns [B, Hq, Sq, D] float32.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    chunk = skv if chunk is None else min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    nkv = skv // chunk
+    qg = q.reshape(b, hkv, group, sq, d)
+    q_pos = q_offset + jnp.arange(sq)[:, None]                 # [Sq, 1]
+
+    def block(carry, inp):
+        m, l, acc = carry
+        ki, vi, ks_i, vs_i, valid_i, idx = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, ki,
+                       preferred_element_type=jnp.float32) * scale
+        if ks_i is not None:   # fold K dequant scale in after the dot (exact)
+            s = s * ks_i[:, :, None, None, :]
+        kv_pos = idx * chunk + jnp.arange(chunk)[None, :]      # [1, C]
+        if valid_i is not None:
+            mask = valid_i[:, None, None, :, :]                # [B,1,1,Sq,C]
+        else:
+            mask = jnp.ones((sq, chunk), bool)
+            if causal:
+                mask &= kv_pos <= q_pos
+            if window is not None:
+                mask &= kv_pos > q_pos - window
+            if start is not None:
+                mask = mask[None] & (kv_pos[None] >=
+                                     start[:, None, None])    # [B, Sq, C]
+            mask = mask[:, None, None] if mask.ndim == 3 else mask[None, None]
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)                            # masked rows: 0
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, -1, keepdims=True)
+        if vs_i is not None:   # fold V dequant scale into the probabilities
+            p = p * vs_i[:, :, None, None, :]
+        acc = acc * alpha + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vi,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, hkv, group, sq, 1), -1e30, jnp.float32),
+            jnp.zeros((b, hkv, group, sq, 1), jnp.float32),
+            jnp.zeros((b, hkv, group, sq, d), jnp.float32))
+    if nkv == 1:   # the serving fast path: no scan machinery, one block
+        (m, l, acc), _ = block(init, (k, v, k_scale, v_scale, valid,
+                                      jnp.zeros((), jnp.int32)))
+    else:
+        def split(t, axis):
+            return (None if t is None else
+                    jnp.moveaxis(t.reshape(t.shape[:axis] + (nkv, chunk)
+                                           + t.shape[axis + 1:]), axis, 0))
+        xs = (split(k, 2), split(v, 2), split(k_scale, 2), split(v_scale, 2),
+              split(valid, 2), jnp.arange(nkv))
+        carry = init
+        for i in range(nkv):   # python loop: xs may hold Nones
+            carry, _ = block(carry, tuple(
+                x if x is None or not hasattr(x, "shape") else x[i]
+                for x in xs))
+        m, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, hq, sq, d)

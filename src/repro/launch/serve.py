@@ -37,8 +37,19 @@ def main():
                          "request stream (requests = 2x --batch)")
     ap.add_argument("--slots", type=int, default=0,
                     help="engine batch slots (default: --batch)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: process prompts in chunks of "
+                         "this many tokens (0 = one shot / ring-width auto)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="on-device sampler top-k truncation (0 = off)")
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="on-device sampler nucleus truncation (0 = off)")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
+    chunk = args.prefill_chunk or None
+    top_k = args.top_k or None
+    top_p = args.top_p or None
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -56,13 +67,15 @@ def main():
         slots = args.slots or args.batch
         n_req = 2 * args.batch
         max_len = 2 * args.prompt_len + args.steps + 8
-        engine = ServeEngine(model, params, slots=slots, max_len=max_len)
+        engine = ServeEngine(model, params, slots=slots, max_len=max_len,
+                             prefill_chunk=chunk, top_k=top_k, top_p=top_p)
         lens = rng.integers(max(1, args.prompt_len // 2),
                             args.prompt_len + 1, n_req)
         t0 = time.time()
         for n in lens:
             engine.submit(rng.integers(0, cfg.vocab_size, int(n)),
-                          max_new_tokens=args.steps)
+                          max_new_tokens=args.steps,
+                          temperature=args.temperature)
         results = engine.run()
         dt = time.time() - t0
         total = sum(len(v) for v in results.values())
@@ -77,7 +90,9 @@ def main():
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
         jnp.int32)
     t0 = time.time()
-    out = generate(model, params, prompts, steps=args.steps)
+    out = generate(model, params, prompts, steps=args.steps,
+                   temperature=args.temperature, prefill_chunk=chunk,
+                   top_k=top_k, top_p=top_p)
     dt = time.time() - t0
     print(f"generated {args.batch}x{args.steps} tokens in {dt:.2f}s "
           f"({args.batch*args.steps/dt:.1f} tok/s)")

@@ -4,15 +4,27 @@ Training/prefill run the flash-attention op (Pallas on TPU, oracle on
 CPU).  Decode maintains a KV cache; models with a sliding window use a
 ring buffer of size ``window`` (slot = pos % window) so the long_500k
 cell carries O(window) state instead of O(seq).
+
+Serving paths (``decode_step`` / ``prefill_step``) share one data path:
+cache writes go through :mod:`repro.models.kv_cache` and the attention
+itself through ``attn_ops.masked_attention`` — a tiled online-softmax
+core (Pallas with scalar-prefetch ``start`` on TPU, a blocked jnp oracle
+on CPU) instead of the dense -1e30-masked einsum the seed carried in
+duplicate.  ``prefill_step`` takes a ``pos0`` chunk offset so prompts
+longer than the sliding-window ring are prefilled in chunks that write
+the cache through (see ``transformer.Model.prefill``).
 """
 
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.flash_attention import ops as attn_ops
+from repro.models import kv_cache
 from repro.models import layers as L
 
 
@@ -74,12 +86,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def _quantize_kv(t):
-    """[B, 1, H, hd] -> (int8 values, bf16 per-head scale)."""
-    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127)
-    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+def _scale_op(s):
+    """[B, S, Hkv, 1] stored scale -> [B, Hkv, S] f32 fold operand."""
+    return None if s is None else s[..., 0].transpose(0, 2, 1).astype(jnp.float32)
+
+
+def _finish(cfg: ModelConfig, p, out):
+    """[B, Hq, S, hd] f32 attention -> output projection."""
+    b, _, s, _ = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return L.dense_apply(p["wo"], out.astype(L.cdtype(cfg)), L.cdtype(cfg))
 
 
 def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
@@ -89,13 +105,14 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
 
     Returns (y [B, 1, D], updated cache).  Keys are rotated at write time;
     ring slots are masked by reconstructing each slot's absolute position
-    from ``pos``.  ``start`` ([B] int32, optional) is the number of
-    left-pad slots per sequence for ragged batches: RoPE positions become
-    ``pos - start`` (real tokens count from 0) and slots below ``start``
-    are masked out of the attention forever.  Supports bf16 and quantized
-    (int8 + per-head scale) caches; scales are folded EXACTLY into the
-    attention dots (K: after the q.k dot; V: into the probabilities), so
-    int8 KV changes bytes, not math beyond round-off.
+    from ``pos`` (scattered positions — passed to the shared attention
+    core as an explicit ``valid`` mask).  ``start`` ([B] int32, optional)
+    is the number of left-pad slots per sequence for ragged batches: RoPE
+    positions become ``pos - start`` (real tokens count from 0) and slots
+    below ``start`` are masked out of the attention forever.  Supports
+    bf16 and quantized (int8 + per-head scale) caches; scales are folded
+    EXACTLY into the attention dots (K: after the q.k dot; V: into the
+    probabilities), so int8 KV changes bytes, not math beyond round-off.
     """
     b = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -108,22 +125,8 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
     w = cache["k"].shape[1]
     slot = pos % w if cfg.sliding_window else pos
 
-    def upd(c, new):
-        new = new.astype(c.dtype)
-        if per_seq:  # one write index per sequence
-            return jax.vmap(
-                lambda cb, nb, sb: jax.lax.dynamic_update_slice_in_dim(
-                    cb, nb, sb, 0))(c, new, slot)
-        return jax.lax.dynamic_update_slice_in_dim(c, new, slot, 1)
-
-    quantized = "k_s" in cache
-    if quantized:
-        kq, ks = _quantize_kv(k)
-        vq, vs = _quantize_kv(v)
-        ck, cv = upd(cache["k"], kq), upd(cache["v"], vq)
-        cks, cvs = upd(cache["k_s"], ks), upd(cache["v_s"], vs)
-    else:
-        ck, cv = upd(cache["k"], k), upd(cache["v"], v)
+    new, _, _, _, _ = kv_cache.write(
+        cache, k, v, lambda c, n: kv_cache.token_update(c, n, slot, per_seq))
 
     # absolute position held by each ring slot (== slot index when the
     # cache is not a ring buffer)
@@ -137,110 +140,87 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
     if cfg.sliding_window:
         valid &= slot_pos > pos_b[:, None] - cfg.sliding_window
 
-    # grouped-query attention against the cache (einsum path: the mask is
-    # position-scattered, which the contiguous flash kernel can't express).
-    # The cache stays in its storage dtype — f32 happens only in the
-    # contraction accumulator (preferred_element_type), never as a
-    # materialized f32 copy of the multi-GB cache.
-    group = cfg.num_heads // cfg.num_kv_heads
-    qh = q[:, 0].reshape(b, cfg.num_kv_heads, group, cfg.head_dim)
+    # attention against the whole cache through the shared masked core
+    # (the ring mask is position-scattered, so it rides as an explicit
+    # ``valid`` [B, 1, W] — decode-sized, never O(S^2)).  The cache stays
+    # in its storage dtype — f32 happens only in the contraction
+    # accumulator (preferred_element_type), never as a materialized f32
+    # copy of the multi-GB cache.
     dt = L.cdtype(cfg)
-    kop = ck if not quantized else ck.astype(dt)
-    s = jnp.einsum("bhgd,bwhd->bhgw", qh.astype(dt), kop,
-                   preferred_element_type=jnp.float32) * (cfg.head_dim**-0.5)
-    if quantized:  # fold the per-slot K scale in after the dot (exact)
-        s = s * cks[..., 0].transpose(0, 2, 1)[:, :, None, :].astype(jnp.float32)
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
-    pattn = jax.nn.softmax(s, axis=-1)
-    # a fully-masked row (query is itself a left-pad slot) would softmax
-    # to uniform attention over path-dependent cache garbage — zero it so
-    # pad outputs are deterministic (x1.0 no-op for every real query)
-    pattn = pattn * jnp.any(valid, -1)[:, None, None, None].astype(jnp.float32)
-    if quantized:  # fold the per-slot V scale into the probabilities
-        pattn = pattn * cvs[..., 0].transpose(0, 2, 1)[:, :, None, :].astype(jnp.float32)
-        vop = cv.astype(dt)
-    else:
-        vop = cv
-    out = jnp.einsum("bhgw,bwhd->bhgd", pattn.astype(dt), vop,
-                     preferred_element_type=jnp.float32)
-    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim).astype(L.cdtype(cfg))
-    y = L.dense_apply(p["wo"], out, L.cdtype(cfg))
-    new = {"k": ck, "v": cv}
-    if quantized:
-        new.update(k_s=cks, v_s=cvs)
-    return y, new
+    quantized = "k_s" in new
+    kop = new["k"] if not quantized else new["k"].astype(dt)
+    vop = new["v"] if not quantized else new["v"].astype(dt)
+    out = attn_ops.masked_attention(
+        q.transpose(0, 2, 1, 3), kop.transpose(0, 2, 1, 3),
+        vop.transpose(0, 2, 1, 3), valid=valid[:, None, :],
+        k_scale=_scale_op(new.get("k_s")), v_scale=_scale_op(new.get("v_s")))
+    return _finish(cfg, p, out), new
 
 
-def prefill_step(cfg: ModelConfig, p, x, cache, start=None):
-    """Whole-prompt forward with KV cache write-through: the batched twin
+def prefill_step(cfg: ModelConfig, p, x, cache, start=None, pos0: int = 0):
+    """Prompt-chunk forward with KV cache write-through: the batched twin
     of ``decode_step``.  x: [B, S, D] -> (y [B, S, D], updated cache).
 
-    All S keys/values are rotated and written to slots 0..S-1 in one shot,
-    and every query attends over the full cache width with the SAME einsum
-    structure and mask semantics as ``decode_step`` — slots beyond the
-    query column (or below ``start``) are -1e30 before the softmax, so the
-    result is bit-identical to stepping the prompt token by token.
+    All S keys/values are rotated and written to slots ``pos0 .. pos0+S-1``
+    (wrapping modulo the ring width for sliding-window caches) in one
+    shot, and every query attends through the SAME masked flash core and
+    mask semantics as ``decode_step`` — on the shared jnp oracle path
+    (CPU, where the parity tests pin it) the result is bit-identical to
+    stepping the prompt token by token; on TPU prefill runs the Pallas
+    kernel while decode keeps the oracle (the ring ``valid`` mask), so
+    parity there is exact-math at round-off (atol) level.
 
-    Requires S <= cache width (a sliding-window ring that wraps during
-    prefill cannot be expressed as one dense attention; ``generate`` falls
-    back to the sequential path in that case).
+    ``pos0`` (static int) is the chunk offset for chunked prefill: the
+    queries attend over the retained context (the last ``min(pos0, W)``
+    cache slots, gathered into position order) plus the chunk itself.
+    ``pos0=0`` is the one-shot prefill, which attends over the fresh
+    K/V directly — no cache read-back at all.  Each call requires
+    S <= cache width; ``Model.prefill`` chunks longer prompts.
     """
     b, s, _ = x.shape
     w = cache["k"].shape[1]
+    pos0 = int(pos0)
+    ring = cfg.sliding_window is not None
     if s > w:
         raise ValueError(
-            f"prefill length {s} exceeds cache width {w}; use the "
-            "sequential (token-by-token) prefill for wrapped ring buffers")
-    cols = jnp.arange(s, dtype=jnp.int32)
+            f"prefill chunk length {s} exceeds cache width {w}; use chunked "
+            "prefill (Model.prefill splits prompts beyond the ring width)")
+    if not ring and pos0 + s > w:
+        raise ValueError(
+            f"prefill chunk [{pos0}, {pos0 + s}) exceeds cache width {w}")
+    cols = pos0 + jnp.arange(s, dtype=jnp.int32)
     start_b = (jnp.zeros((b,), jnp.int32) if start is None
                else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
     positions = cols[None, :] - start_b[:, None]      # [B, S] relative
     q, k, v = _project(cfg, p, x, positions)
 
-    def upd(c, new):
-        return jax.lax.dynamic_update_slice_in_dim(c, new.astype(c.dtype), 0, 1)
+    # context gathered BEFORE the write: chunk writes may evict exactly
+    # the ring slots the earliest queries still attend to
+    ctx = min(pos0, w)
+    idx = (np.arange(pos0 - ctx, pos0) % w) if ctx else None
 
-    quantized = "k_s" in cache
-    if quantized:
-        kq, ks = _quantize_kv(k)
-        vq, vs = _quantize_kv(v)
-        ck, cv = upd(cache["k"], kq), upd(cache["v"], vq)
-        cks, cvs = upd(cache["k_s"], ks), upd(cache["v_s"], vs)
-    else:
-        ck, cv = upd(cache["k"], k), upd(cache["v"], v)
+    new, kf, vf, ksf, vsf = kv_cache.write(
+        cache, k, v, lambda c, n: kv_cache.prompt_update(c, n, pos0, ring))
 
-    # attention contracts over the S prompt columns only — cache columns
-    # >= S are unwritten this prefill and would be masked to exact zeros
-    # anyway, so slicing them off is bit-identical and saves W/S of the
-    # score FLOPs (the engine prefills small buckets against wide caches)
-    idx = jnp.arange(s)
-    valid = ((idx[None, None, :] <= cols[None, :, None])
-             & (idx[None, None, :] >= start_b[:, None, None]))
-    if cfg.sliding_window:
-        valid &= idx[None, None, :] > cols[None, :, None] - cfg.sliding_window
+    def cat(prev, fresh):
+        return fresh if idx is None else jnp.concatenate(
+            [prev[:, idx], fresh.astype(prev.dtype)], axis=1)
 
-    group = cfg.num_heads // cfg.num_kv_heads
-    qh = q.reshape(b, s, cfg.num_kv_heads, group, cfg.head_dim)
+    kop, vop = cat(cache["k"], kf), cat(cache["v"], vf)
+    ks = vs = None
+    if "k_s" in cache:
+        ks, vs = cat(cache["k_s"], ksf), cat(cache["v_s"], vsf)
     dt = L.cdtype(cfg)
-    kop = ck[:, :s] if not quantized else ck[:, :s].astype(dt)
-    sc = jnp.einsum("bqhgd,bwhd->bqhgw", qh.astype(dt), kop,
-                    preferred_element_type=jnp.float32) * (cfg.head_dim**-0.5)
-    if quantized:
-        sc = sc * cks[:, :s, :, 0].transpose(0, 2, 1)[:, None, :, None, :].astype(jnp.float32)
-    sc = jnp.where(valid[:, :, None, None, :], sc, -1e30)
-    pattn = jax.nn.softmax(sc, axis=-1)
-    # pad-slot queries (fully-masked rows): zero, as in decode_step
-    pattn = pattn * jnp.any(valid, -1)[:, :, None, None, None].astype(jnp.float32)
-    if quantized:
-        pattn = pattn * cvs[:, :s, :, 0].transpose(0, 2, 1)[:, None, :, None, :].astype(jnp.float32)
-        vop = cv[:, :s].astype(dt)
-    else:
-        vop = cv[:, :s]
-    out = jnp.einsum("bqhgw,bwhd->bqhgd", pattn.astype(dt), vop,
-                     preferred_element_type=jnp.float32)
-    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim).astype(L.cdtype(cfg))
-    y = L.dense_apply(p["wo"], out, L.cdtype(cfg))
-    new = {"k": ck, "v": cv}
-    if quantized:
-        new.update(k_s=cks, v_s=cvs)
-    return y, new
+    if kop.dtype == jnp.int8:
+        kop, vop = kop.astype(dt), vop.astype(dt)
+
+    # kv column j holds absolute position pos0 - ctx + j; q row t sits at
+    # pos0 + t = local ctx + t.  The left-pad mask converts to local
+    # coordinates (clamped: pads older than the retained context are gone
+    # from the ring anyway).
+    start_local = jnp.clip(start_b - (pos0 - ctx), 0, None)
+    out = attn_ops.masked_attention(
+        q.transpose(0, 2, 1, 3), kop.transpose(0, 2, 1, 3),
+        vop.transpose(0, 2, 1, 3), start=start_local, q_offset=ctx,
+        window=cfg.sliding_window, k_scale=_scale_op(ks), v_scale=_scale_op(vs))
+    return _finish(cfg, p, out), new

@@ -1,0 +1,77 @@
+"""Shared KV-cache write-through helpers for the attention serving paths.
+
+``decode_step``, ``prefill_step`` and the chunked prefill all mutate the
+same cache layout ({k, v} bf16, or {k, v, k_s, v_s} for int8-KV); before
+this module each carried its own near-identical ``upd`` closure.  The
+write is factored into (a) one *placement* function per path — where the
+new rows land — and (b) one ``write`` driver that applies it to every
+leaf, quantizing en route when the cache is int8.
+
+Placement semantics:
+
+* :func:`token_update` — one row per sequence at ``slot`` (scalar, or a
+  per-sequence [B] vector for continuous batching);
+* :func:`prompt_update` — S contiguous rows at ``pos0`` (chunked
+  prefill), wrapping modulo the ring width for sliding-window caches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_kv(t):
+    """[B, S, H, hd] -> (int8 values, bf16 per-(slot, head) scale)."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def token_update(c, new, slot, per_seq: bool):
+    """Write one [B, 1, ...] row at ``slot`` (decode)."""
+    new = new.astype(c.dtype)
+    if per_seq:  # one write index per sequence (serving slots)
+        return jax.vmap(
+            lambda cb, nb, sb: jax.lax.dynamic_update_slice_in_dim(
+                cb, nb, sb, 0))(c, new, slot)
+    return jax.lax.dynamic_update_slice_in_dim(c, new, slot, 1)
+
+
+def prompt_update(c, new, pos0: int, ring: bool):
+    """Write [B, S, ...] rows at slots ``pos0 .. pos0+S-1`` (prefill).
+
+    ``pos0`` is a static chunk offset; with ``ring`` the slots wrap
+    modulo the cache width (sliding-window chunked prefill).
+    """
+    s, w = new.shape[1], c.shape[1]
+    new = new.astype(c.dtype)
+    if not ring or pos0 + s <= w:       # contiguous, no wrap
+        return jax.lax.dynamic_update_slice_in_dim(c, new, pos0, 1)
+    idx = (pos0 + np.arange(s)) % w     # static wrapped slot indices
+    return c.at[:, idx].set(new)
+
+
+def write(cache: dict, k, v, upd) -> dict:
+    """Apply placement ``upd(leaf, new) -> leaf`` to every cache leaf,
+    quantizing k/v first when the cache is int8.  Returns the new cache
+    pieces plus the operand views the attention should contract against
+    (the freshly written values, in storage form):
+
+        (new_cache, k_op, v_op, k_scale, v_scale)
+
+    k_op/v_op are int8 for quantized caches (with [B, S, H, 1] scales)
+    — bit-identical to reading the written slots back, without the
+    cache round-trip.
+    """
+    if "k_s" in cache:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new = {"k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
+               "k_s": upd(cache["k_s"], ks), "v_s": upd(cache["v_s"], vs)}
+        return new, kq, vq, ks, vs
+    ks, vs = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    new = {"k": upd(cache["k"], ks), "v": upd(cache["v"], vs)}
+    return new, ks, vs, None, None

@@ -97,14 +97,14 @@ def _layer_decode(cfg: ModelConfig, spec, p, x, cache, pos, dist=None,
 
 
 def _layer_prefill(cfg: ModelConfig, spec, p, x, cache, start=None,
-                   pad_mask=None, dist=None):
-    """Full-sequence layer forward that writes the decode cache through.
-    Returns (x [B, S, D], new per-layer cache at pos=S)."""
+                   pad_mask=None, dist=None, pos0: int = 0):
+    """Prompt-chunk layer forward that writes the decode cache through.
+    Returns (x [B, S, D], new per-layer cache at pos=pos0+S)."""
     mixer, ffn = spec
     if mixer == "attn":
         h = L.norm_apply(cfg, p["mixer_norm"], x)
         y, cache = attention.prefill_step(cfg, p["mixer"], h, cache,
-                                          start=start)
+                                          start=start, pos0=pos0)
         x = x + y
     elif mixer == "ssm":
         h = L.norm_apply(cfg, p["mixer_norm"], x)
@@ -169,7 +169,8 @@ class Model:
     def apply(self, params, tokens=None, embeds=None, labels=None,
               remat: str = "none", last_only: bool = False,
               fused_loss: bool = False, cache=None, write_cache: bool = False,
-              pad_mask=None):
+              pad_mask=None, pos0: int = 0, start=None,
+              need_logits: bool = True):
         """Full-sequence forward.
 
         ``write_cache=True`` turns this into the batched serving prefill:
@@ -180,25 +181,31 @@ class Model:
         per-layer math mirrors ``decode_step`` exactly, so the logits and
         cache are bit-identical to stepping the prompt token by token.
 
-        ``pad_mask`` ([B, S] bool, True = real token) supports ragged
-        batches via LEFT padding: pad columns are masked out of attention
-        (and frozen out of SSM state), and RoPE positions count from each
-        sequence's first real token.
+        ``pos0`` (static int) marks this forward as chunk ``[pos0,
+        pos0+S)`` of a longer prompt (chunked prefill — the cache must
+        already sit at ``pos == pos0``); :meth:`prefill` drives the chunk
+        loop.  ``pad_mask`` ([B, S] bool, True = real token) supports
+        ragged batches via LEFT padding: pad columns are masked out of
+        attention (and frozen out of SSM state), and RoPE positions count
+        from each sequence's first real token.  ``start`` ([B] int32)
+        overrides the pad count derived from ``pad_mask`` — required for
+        chunks past the first, where the mask slice no longer sees the
+        row's left pads.
         """
         cfg = self.cfg
         if write_cache and cache is None:
             raise ValueError("write_cache=True requires a cache from "
                              "init_cache(batch, max_len)")
         if write_cache and not isinstance(cache["pos"], jax.core.Tracer):
-            # prefill writes K/V at slots 0..S-1: a cache that has already
-            # advanced would be silently clobbered (chunked prefill is a
-            # ROADMAP item, not supported yet).  Best-effort check — a
-            # traced pos (cache passed as a jit argument) can't be read.
+            # prefill writes K/V at slots pos0..pos0+S-1: a cache at any
+            # other depth would be silently clobbered.  Best-effort check
+            # — a traced pos (cache passed as a jit argument) can't be
+            # read.
             import numpy as np
-            if np.any(np.asarray(cache["pos"]) != 0):
+            if np.any(np.asarray(cache["pos"]) != pos0):
                 raise ValueError(
-                    "write_cache prefill requires a fresh cache (pos == 0); "
-                    f"got pos={np.asarray(cache['pos'])}")
+                    f"write_cache prefill chunk at pos0={pos0} requires the "
+                    f"cache there; got pos={np.asarray(cache['pos'])}")
         if embeds is None:
             x = L.embed_apply(cfg, params["embed"], tokens)
         else:
@@ -207,8 +214,7 @@ class Model:
 
         if write_cache:
             s = x.shape[1]
-            start = None
-            if pad_mask is not None:
+            if start is None and pad_mask is not None and pos0 == 0:
                 start = (s - jnp.sum(pad_mask.astype(jnp.int32), axis=1))
 
             def group_body(carry, scan_in):
@@ -221,7 +227,7 @@ class Model:
                 new_caches = []
                 for i, spec in enumerate(cfg.group):
                     x, c = _layer_prefill(cfg, spec, gparams[i], x, gcache[i],
-                                          start, pad_mask, self.dist)
+                                          start, pad_mask, self.dist, pos0)
                     new_caches.append(c)
                 full_cache = jax.tree.map(
                     lambda full, new: jax.lax.dynamic_update_index_in_dim(
@@ -256,12 +262,14 @@ class Model:
                     policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
             x, auxes = jax.lax.scan(group_body, x, params["groups"],
                                     unroll=self.cfg.num_groups if self.scan_unroll else 1)
-        if last_only:   # prefill serving: only the last position's logits
-            x = x[:, -1:, :]
-        x = L.norm_apply(cfg, params["final_norm"], x)
         out = {"aux_loss": jnp.sum(auxes)}
         if new_cache is not None:
             out["cache"] = new_cache
+        if not need_logits:   # non-final prefill chunk: cache only, no
+            return out        # final norm / vocab projection
+        if last_only:   # prefill serving: only the last position's logits
+            x = x[:, -1:, :]
+        x = L.norm_apply(cfg, params["final_norm"], x)
         head = params.get("lm_head")
         if fused_loss:
             # never materializes [B, S, V] logits (chunked + remat)
@@ -363,13 +371,62 @@ class Model:
         new_cache["pos"] = pos + 1
         return logits[:, 0], new_cache
 
-    def prefill(self, params, cache, tokens=None, embeds=None, pad_mask=None):
-        """Batched serving prefill: one forward pass that populates the
+    def _attn_cache_width(self, cache) -> int | None:
+        """Slot count of the attention KV ring (None: attention-free)."""
+        for i, (mixer, _) in enumerate(self.cfg.group):
+            if mixer == "attn":
+                return cache["layers"][i]["k"].shape[2]   # [G, B, W, H, hd]
+        return None
+
+    def prefill(self, params, cache, tokens=None, embeds=None, pad_mask=None,
+                chunk: int | None = None):
+        """Batched serving prefill: forward pass(es) that populate the
         decode cache.  Returns (last-token logits [B, V], cache at
-        pos=S0) — exactly what the first decode step needs."""
-        out = self.apply(params, tokens=tokens, embeds=embeds, cache=cache,
-                         write_cache=True, last_only=True, pad_mask=pad_mask)
-        return out["logits"][:, 0], out["cache"]
+        pos=S0) — exactly what the first decode step needs.
+
+        Prompts longer than the attention cache width (a sliding-window
+        ring the prompt would wrap), or any prompt when ``chunk`` /
+        ``cfg.prefill_chunk`` is set, are processed in fixed-size chunks
+        that write the cache through per chunk — peak activation memory
+        is O(chunk * W) instead of O(S0^2), so arbitrarily long prompts
+        are servable.  Each chunk runs the same masked-flash layer math,
+        so on the oracle path the final logits and cache are
+        bit-identical to the one-shot (and to token-by-token) prefill
+        until the ring wraps, and exact-math/atol-level after (the ring
+        reorders the f32 reduction; same caveat on TPU, where prefill
+        runs the Pallas kernel).
+        """
+        x = tokens if tokens is not None else embeds
+        s0 = x.shape[1]
+        chunk = chunk if chunk is not None else self.cfg.prefill_chunk
+        width = self._attn_cache_width(cache)
+        if chunk is None and (width is None or s0 <= width):
+            out = self.apply(params, tokens=tokens, embeds=embeds, cache=cache,
+                             write_cache=True, last_only=True,
+                             pad_mask=pad_mask)
+            return out["logits"][:, 0], out["cache"]
+
+        c = chunk or width          # auto-chunk at the ring width
+        if width is not None:
+            c = min(c, width)       # prefill_step bound: one chunk per write
+        c = max(int(c), 1)
+        start = None
+        if pad_mask is not None:
+            start = (s0 - jnp.sum(pad_mask.astype(jnp.int32), axis=1))
+        logits = None
+        for lo in range(0, s0, c):
+            hi = min(lo + c, s0)
+            out = self.apply(
+                params,
+                tokens=None if tokens is None else tokens[:, lo:hi],
+                embeds=None if embeds is None else embeds[:, lo:hi],
+                cache=cache, write_cache=True, last_only=True,
+                pad_mask=None if pad_mask is None else pad_mask[:, lo:hi],
+                pos0=lo, start=start, need_logits=(hi == s0))
+            cache = out["cache"]
+            if hi == s0:
+                logits = out["logits"][:, 0]
+        return logits, cache
 
 
 def build_model(cfg: ModelConfig, **kw) -> Model:

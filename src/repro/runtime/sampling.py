@@ -1,0 +1,92 @@
+"""On-device batched sampling for the serving engine.
+
+One jitted, fully vectorized sampler replaces the per-slot host loop
+(``np.argmax`` / ``jax.random.categorical`` per row) the engine used to
+run: every decode tick issues ONE device dispatch for the whole batch
+and transfers [B] int32 tokens back — not [B, V] logits.
+
+Semantics per row b:
+
+* ``temperature[b] <= 0``: greedy argmax (deterministic, key unused);
+* otherwise: softmax sampling at that temperature via the Gumbel trick,
+  after optional top-k and nucleus (top-p) truncation;
+* ``done[b]``: emit ``pad_id`` (finished serving slots stay parked).
+
+Each row samples under its OWN PRNG key ([B, 2] uint32), split in-step,
+so a slot's token stream is independent of batch composition — request
+replay gives identical tokens whichever slots its neighbours occupy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = jnp.float32(-1e30)
+
+
+def sample_logits(logits, keys, temperature, *, top_k: int | None = None,
+                  top_p: float | None = None, done=None, pad_id: int = 0):
+    """Sample one token per row.  logits: [B, V]; keys: [B, 2] uint32;
+    temperature: [B] f32.  Returns (tokens [B] int32, new_keys [B, 2]).
+
+    Build a per-configuration jitted callable with :func:`make_sampler`
+    rather than calling this in a loop (top_k/top_p/pad_id are static).
+    """
+    l32 = logits.astype(jnp.float32)
+    b, v = l32.shape
+    split = jax.vmap(jax.random.split)(keys)          # [B, 2, 2]
+    sub, new_keys = split[:, 0], split[:, 1]
+
+    temperature = jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32), (b,))
+    tsafe = jnp.where(temperature > 0, temperature, 1.0)[:, None]
+    lt = l32 / tsafe
+    if top_k is not None and top_k < v:
+        kth = jax.lax.top_k(lt, top_k)[0][:, -1:]     # [B, 1]
+        lt = jnp.where(lt < kth, _NEG_INF, lt)
+    if top_p is not None and top_p < 1.0:
+        order = jnp.argsort(-lt, axis=-1)
+        sorted_lt = jnp.take_along_axis(lt, order, axis=-1)
+        probs = jax.nn.softmax(sorted_lt, axis=-1)
+        # exclusive cumsum: a token is kept while the mass BEFORE it is
+        # below top_p, so the head token always survives
+        before = jnp.cumsum(probs, axis=-1) - probs
+        keep_sorted = before < top_p
+        keep = jnp.zeros_like(keep_sorted).at[
+            jnp.arange(b)[:, None], order].set(keep_sorted)
+        lt = jnp.where(keep, lt, _NEG_INF)
+
+    gumbel = jax.vmap(lambda k: jax.random.gumbel(k, (v,), jnp.float32))(sub)
+    sampled = jnp.argmax(lt + gumbel, axis=-1)
+    greedy = jnp.argmax(l32, axis=-1)
+    tok = jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+    if done is not None:
+        tok = jnp.where(done, jnp.int32(pad_id), tok)
+    return tok, new_keys
+
+
+@functools.lru_cache(maxsize=None)
+def make_sampler(top_k: int | None = None, top_p: float | None = None,
+                 pad_id: int = 0):
+    """Jitted (logits [B,V], keys [B,2], temperature [B], done [B]?) ->
+    (tokens [B], new_keys) sampler with the truncation knobs baked in.
+
+    Memoized on the knobs: jax.jit caches by function identity, so
+    callers that build a sampler per call (``generate``) would otherwise
+    recompile every time.
+    """
+    @jax.jit
+    def sampler(logits, keys, temperature, done=None):
+        return sample_logits(logits, keys, temperature, top_k=top_k,
+                             top_p=top_p, done=done, pad_id=pad_id)
+    return sampler
+
+
+def init_keys(seed_or_key, batch: int):
+    """[B, 2] uint32 per-slot key array from an int seed or a PRNG key."""
+    key = (jax.random.PRNGKey(seed_or_key)
+           if isinstance(seed_or_key, int) else seed_or_key)
+    return jax.random.split(key, batch)

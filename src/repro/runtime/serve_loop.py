@@ -1,17 +1,22 @@
-"""Serving engine: batched prefill, decode steps, continuous batching.
+"""Serving engine: flash prefill, chunked admission, continuous batching.
 
 Three layers, bottom-up:
 
 - ``make_prefill_step`` / ``make_serve_step``: the single jitted
   functions the decode_* and long_* dry-run cells lower;
 - ``generate``: the end-to-end loop used by examples and tests.  The
-  prompt is prefilled in ONE ``model.apply`` forward pass that writes the
-  KV/SSM caches through (bit-identical to stepping it token by token —
-  asserted in tests), with left-padding + attention masking for ragged
-  prompt batches and per-sequence EOS early-stop;
-- ``ServeEngine``: a fixed-slot continuous-batching engine.  Requests are
-  admitted into free batch slots by prefilling the newcomer while the
-  other slots keep decoding; finished slots are refilled from the queue.
+  prompt is prefilled through the masked flash-attention cache
+  write-through path (one ``model.prefill`` call; prompts longer than
+  the sliding-window ring — or a ``prefill_chunk`` knob — are processed
+  in fixed-size chunks), with left-padding + attention masking for
+  ragged prompt batches and per-sequence EOS early-stop;
+- ``ServeEngine``: a fixed-slot continuous-batching engine.  Requests
+  are admitted into free batch slots by prefilling the newcomer while
+  the other slots keep decoding; finished slots are refilled from the
+  queue.  Sampling runs ON DEVICE (``repro.runtime.sampling``): each
+  decode tick is one batched decode dispatch plus one batched sample
+  dispatch, and only [B] int32 tokens cross back to the host — never
+  the [B, V] logits.
 
 With EN-T quantized params every projection in every one of these paths
 runs the FUSED packed-plane matmul (repro.quant.qdense_apply): per-row
@@ -29,8 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import attention
 from repro.models.transformer import Model
+from repro.runtime import sampling
 
 
 def make_prefill_step(model: Model):
@@ -74,7 +79,8 @@ def _pad_mask_from_lens(prompt_lens, b: int, s0: int):
 def generate(model: Model, params, prompt_tokens, steps: int, *,
              temperature: float = 0.0, key=None, max_len: int | None = None,
              eos_id: int | None = None, pad_id: int = 0, prompt_lens=None,
-             prefill: str = "batched"):
+             prefill: str = "batched", prefill_chunk: int | None = None,
+             top_k: int | None = None, top_p: float | None = None):
     """Greedy/temperature generation on top of the batched prefill.
 
     prompt_tokens: [B, S0] int32, LEFT-padded when ragged (``prompt_lens``
@@ -83,11 +89,15 @@ def generate(model: Model, params, prompt_tokens, steps: int, *,
     ``eos_id`` emit it and then ``pad_id`` for the remaining columns, and
     the loop stops early once every row is done.
 
-    ``prefill`` selects "batched" (one model.apply forward pass with cache
-    write-through — the fast path) or "sequential" (token-by-token decode
-    steps; the reference path the equivalence tests compare against).
-    Batched prefill falls back to sequential when a sliding-window ring
-    buffer would wrap mid-prompt (S0 > window).
+    ``prefill`` selects "batched" (model.prefill cache write-through —
+    the fast path; prompts longer than the sliding-window ring, or than
+    ``prefill_chunk`` when set, are processed in cache-write-through
+    chunks) or "sequential" (token-by-token decode steps; the reference
+    path the equivalence tests compare against).
+
+    Sampling is the on-device batched sampler (``repro.runtime.sampling``)
+    with one PRNG key per row: ``temperature``/``top_k``/``top_p`` apply
+    to every row, and a whole decode step is two device dispatches.
     """
     prompt_tokens = jnp.asarray(prompt_tokens, jnp.int32)
     if prompt_tokens.ndim != 2 or 0 in prompt_tokens.shape:
@@ -99,7 +109,7 @@ def generate(model: Model, params, prompt_tokens, steps: int, *,
     if prefill not in ("batched", "sequential"):
         raise ValueError(f"unknown prefill mode {prefill!r}")
     b, s0 = prompt_tokens.shape
-    if temperature > 0 and key is None:
+    if key is None:
         key = jax.random.PRNGKey(0)
     max_len = max_len or (s0 + steps)
 
@@ -112,11 +122,9 @@ def generate(model: Model, params, prompt_tokens, steps: int, *,
         cache["start"] = start
     step = make_serve_step(model)
 
-    if prefill == "batched" and s0 > attention.cache_len(model.cfg, max_len):
-        prefill = "sequential"   # ring buffer wraps mid-prompt
     if prefill == "batched":
-        logits, cache = model.prefill(params, cache,
-                                      tokens=prompt_tokens, pad_mask=mask)
+        logits, cache = model.prefill(params, cache, tokens=prompt_tokens,
+                                      pad_mask=mask, chunk=prefill_chunk)
     else:
         logits = None
         if mask is None:
@@ -129,18 +137,21 @@ def generate(model: Model, params, prompt_tokens, steps: int, *,
                 logits, cache = sstep(params, cache, prompt_tokens[:, t],
                                       mask[:, t])
 
+    greedy = temperature <= 0 and top_k is None and top_p is None
+    if not greedy:
+        sampler = sampling.make_sampler(top_k, top_p, pad_id)
+        keys = sampling.init_keys(key, b)
+        temp = jnp.full((b,), temperature, jnp.float32)
     outs = []
     done = jnp.zeros((b,), bool)
     tok = None
     for _ in range(steps):
         if tok is not None:
             logits, cache = step(params, cache, tok)
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+        if greedy:   # no [B, V] Gumbel draw on the pure-argmax path
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
-            tok = jnp.argmax(logits, axis=-1)
-        tok = tok.astype(jnp.int32)
+            tok, keys = sampler(logits, keys, temp)
         if eos_id is not None:
             tok = jnp.where(done, pad_id, tok)
             done = done | (tok == eos_id)
@@ -186,12 +197,18 @@ class ServeEngine:
     The engine keeps one [slots, max_len] decode cache with PER-SLOT
     positions and pad offsets (``cache["pos"]``/``cache["start"]`` are [B]
     vectors).  Each ``step()`` tick first admits queued requests into free
-    slots — the newcomer's prompt is prefilled in one batched forward pass
-    (bucketed to a power-of-two length, left-padded + masked) and its
-    populated cache row is spliced into the batch cache — then runs ONE
-    batched decode step for every slot.  A slot is freed on EOS or
+    slots — the newcomer's prompt is prefilled through the batched cache
+    write-through path (bucketed to a power-of-two length, left-padded +
+    masked, chunked at ``prefill_chunk`` when set) and its populated
+    cache row is spliced into the batch cache — then runs ONE batched
+    decode step plus ONE batched on-device sample step for every slot:
+    per-slot temperatures ride in a [slots] vector, each slot draws from
+    its own PRNG key (folded from the engine seed and the request uid,
+    so replays are slot-placement independent), and only the [slots]
+    sampled tokens are transferred back.  A slot is freed on EOS or
     ``max_new_tokens`` and immediately becomes refillable, so long and
-    short requests share the batch without barriers (continuous batching).
+    short requests share the batch without barriers (continuous
+    batching).
 
     ``on_token(uid, token, done)`` streams tokens as they are sampled.
     """
@@ -199,7 +216,8 @@ class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int = 4,
                  max_len: int = 128, eos_id: int | None = None,
                  pad_id: int = 0, prefill_bucket: int = 8, seed: int = 0,
-                 on_token=None):
+                 prefill_chunk: int | None = None, top_k: int | None = None,
+                 top_p: float | None = None, on_token=None):
         if slots < 1:
             raise ValueError(f"ServeEngine needs at least one slot, got {slots}")
         if model.cfg.sliding_window and model.cfg.sliding_window < max_len:
@@ -210,6 +228,7 @@ class ServeEngine:
         self.slots, self.max_len = slots, max_len
         self.eos_id, self.pad_id = eos_id, pad_id
         self.prefill_bucket = prefill_bucket
+        self.prefill_chunk = prefill_chunk
         self.on_token = on_token
         cache = model.init_cache(slots, max_len)
         cache["pos"] = jnp.zeros((slots,), jnp.int32)
@@ -223,16 +242,26 @@ class ServeEngine:
 
         def _prefill_one(params, toks, mask):
             c = model.init_cache(1, max_len)
-            return model.prefill(params, c, tokens=toks, pad_mask=mask)
+            return model.prefill(params, c, tokens=toks, pad_mask=mask,
+                                 chunk=prefill_chunk)
 
         # jit's own shape-keyed cache compiles once per length bucket
         self._prefill = jax.jit(_prefill_one)
+        self._sampler = sampling.make_sampler(top_k, top_p, pad_id)
+        self._truncates = top_k is not None or top_p is not None
+        self._argmax = jax.jit(
+            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+        self._seed_key = jax.random.PRNGKey(seed)
+        self._keys = sampling.init_keys(self._seed_key, slots)
+        self._temp = np.zeros((slots,), np.float32)
+        # host mirror of cache["pos"] so per-slot bookkeeping never syncs
+        # on the device cache mid-tick
+        self._pos = np.zeros((slots,), np.int64)
         self._queue: deque[Request] = deque()
         self._free = list(range(slots))
         self._active: dict[int, _SlotState] = {}
         self._next_tok = np.full((slots,), pad_id, np.int32)
         self._results: dict[int, list[int]] = {}
-        self._key = jax.random.PRNGKey(seed)
         self._next_uid = 0
 
     # .. request intake ..
@@ -251,20 +280,13 @@ class ServeEngine:
         return uid
 
     # .. internals ..
-    def _sample(self, logits_row, temperature: float) -> int:
-        if temperature > 0:
-            self._key, sub = jax.random.split(self._key)
-            return int(jax.random.categorical(
-                sub, jnp.asarray(logits_row) / temperature))
-        return int(np.argmax(logits_row))
-
     def _emit(self, slot: int, tok: int) -> bool:
         """Record one sampled token; returns True if the request finished."""
         st = self._active[slot]
         st.emitted.append(tok)
         done = (tok == self.eos_id if self.eos_id is not None else False)
         done = done or len(st.emitted) >= st.req.max_new_tokens
-        done = done or int(self.cache["pos"][slot]) >= self.max_len - 1
+        done = done or int(self._pos[slot]) >= self.max_len - 1
         if self.on_token is not None:
             self.on_token(st.req.uid, tok, done)
         if done:
@@ -273,6 +295,8 @@ class ServeEngine:
             self._free.append(slot)
             self.cache["pos"] = self.cache["pos"].at[slot].set(0)
             self.cache["start"] = self.cache["start"].at[slot].set(0)
+            self._pos[slot] = 0
+            self._temp[slot] = 0.0
         else:
             self._next_tok[slot] = tok
         return done
@@ -291,22 +315,39 @@ class ServeEngine:
                 self.cache["layers"], c1["layers"], slot)
             self.cache["pos"] = self.cache["pos"].at[slot].set(sp)
             self.cache["start"] = self.cache["start"].at[slot].set(sp - n)
+            self._pos[slot] = sp
             self._active[slot] = _SlotState(req)
-            self._emit(slot, self._sample(logits[0], req.temperature))
+            self._temp[slot] = req.temperature
+            # per-request key: replaying a request samples the same stream
+            # regardless of which slot (or neighbours) it lands with
+            self._keys = self._keys.at[slot].set(
+                jax.random.fold_in(self._seed_key, req.uid))
+            tok, krow = self._sampler(
+                logits, self._keys[slot:slot + 1],
+                jnp.full((1,), req.temperature, jnp.float32))
+            self._keys = self._keys.at[slot].set(krow[0])
+            self._emit(slot, int(tok[0]))
 
     # .. driving ..
     def step(self) -> bool:
-        """Admit newcomers, then one batched decode tick for every active
-        slot.  Returns True while there is (or will be) work left."""
+        """Admit newcomers, then one batched decode tick + one batched
+        on-device sample for every active slot (only the [slots] sampled
+        tokens come back to the host).  Returns True while there is (or
+        will be) work left."""
         self._admit()
         if not self._active:
             return bool(self._queue)
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self._next_tok))
-        logits = np.asarray(logits)
+        self._pos += 1     # decode_step advances every slot's pos
+        if self._temp.any() or self._truncates:
+            toks, self._keys = self._sampler(
+                logits, self._keys, jnp.asarray(self._temp))
+        else:              # all-greedy tick: skip the [B, V] Gumbel draw
+            toks = self._argmax(logits)
+        toks = np.asarray(toks)          # the ONE device->host transfer
         for slot in list(self._active):
-            st = self._active[slot]
-            self._emit(slot, self._sample(logits[slot], st.req.temperature))
+            self._emit(slot, int(toks[slot]))
         return bool(self._active or self._queue)
 
     def run(self) -> dict[int, list[int]]:

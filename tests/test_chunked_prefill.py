@@ -1,0 +1,210 @@
+"""Chunked prefill: bit-exactness vs one-shot prefill and sequential
+decode, ragged left-padded batches, prompts longer than the
+sliding-window ring, and the chunk-size-1 edge case.
+
+Parity contract: chunked prefill of a NON-wrapping prompt is
+BIT-identical to the one-shot prefill (and hence to token-by-token
+decode).  Once the ring wraps, sequential decode contracts the ring in
+slot order while chunked prefill uses position order — identical math,
+different f32 reduction pairing — so wrap parity is pinned at
+atol=1e-5 instead.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models.transformer import build_model
+from repro.runtime.serve_loop import ServeEngine, generate
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced_config(get_config("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def windowed():
+    cfg = reduced_config(get_config("mixtral-8x7b"))   # sliding window = 8
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _sequential_prefill(model, params, toks, max_len, mask=None, start=None):
+    cache = model.init_cache(toks.shape[0], max_len)
+    if start is not None:
+        cache["start"] = start
+    logits = None
+    for t in range(toks.shape[1]):
+        logits, cache = model.decode_step(
+            params, cache, tokens=toks[:, t],
+            token_mask=None if mask is None else mask[:, t])
+    return logits, cache
+
+
+def _assert_trees_equal(ca, cb):
+    assert jax.tree.structure(ca) == jax.tree.structure(cb)
+    for a, b in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _assert_trees_close(ca, cb, atol):
+    assert jax.tree.structure(ca) == jax.tree.structure(cb)
+    for a, b in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=atol)
+
+
+class TestChunkedPrefillParity:
+    @pytest.mark.parametrize("chunk", [1, 3, 4, 8])
+    def test_chunked_equals_one_shot_bit_identical(self, tiny, chunk):
+        cfg, model, params = tiny
+        toks = jax.random.randint(jax.random.PRNGKey(7), (2, 10), 1,
+                                  cfg.vocab_size)
+        l1, c1 = model.prefill(params, model.init_cache(2, 16), tokens=toks)
+        l2, c2 = model.prefill(params, model.init_cache(2, 16), tokens=toks,
+                               chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        _assert_trees_equal(c1, c2)
+
+    def test_chunked_equals_sequential_decode(self, tiny):
+        cfg, model, params = tiny
+        toks = jax.random.randint(jax.random.PRNGKey(3), (2, 9), 1,
+                                  cfg.vocab_size)
+        l1, c1 = model.prefill(params, model.init_cache(2, 16), tokens=toks,
+                               chunk=4)
+        l2, c2 = _sequential_prefill(model, params, toks, 16)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        _assert_trees_equal(c1, c2)
+
+    def test_ragged_chunked_bit_identical(self, tiny):
+        """Left pads span chunk boundaries: start > chunk for row 2."""
+        cfg, model, params = tiny
+        b, s0 = 3, 10
+        lens = jnp.asarray([10, 6, 3])
+        mask = jnp.arange(s0)[None, :] >= (s0 - lens[:, None])
+        toks = jax.random.randint(jax.random.PRNGKey(5), (b, s0), 1,
+                                  cfg.vocab_size)
+        toks = jnp.where(mask, toks, 0)
+        l1, c1 = model.prefill(params, model.init_cache(b, 16), tokens=toks,
+                               pad_mask=mask)
+        l2, c2 = model.prefill(params, model.init_cache(b, 16), tokens=toks,
+                               pad_mask=mask, chunk=3)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        _assert_trees_equal(c1, c2)
+
+    @pytest.mark.parametrize("arch", ["mamba2-370m", "jamba-1.5-large"])
+    def test_ssm_and_hybrid_chunked_bit_identical(self, arch):
+        """SSM conv/SSD state must thread exactly through chunk borders."""
+        cfg = reduced_config(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(7), (2, 8), 1,
+                                  cfg.vocab_size)
+        l1, c1 = model.prefill(params, model.init_cache(2, 12), tokens=toks)
+        l2, c2 = model.prefill(params, model.init_cache(2, 12), tokens=toks,
+                               chunk=3)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        _assert_trees_equal(c1, c2)
+
+    def test_quantized_kv_chunked_bit_identical(self, tiny):
+        cfg, _, _ = tiny
+        model = build_model(cfg, kv_quant=True)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(9), (2, 8), 1,
+                                  cfg.vocab_size)
+        l1, c1 = model.prefill(params, model.init_cache(2, 12), tokens=toks)
+        l2, c2 = model.prefill(params, model.init_cache(2, 12), tokens=toks,
+                               chunk=3)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        _assert_trees_equal(c1, c2)
+
+
+class TestRingWrapPrefill:
+    """Prompts longer than the sliding-window ring are now servable:
+    Model.prefill auto-chunks at the ring width and writes through with
+    slot wrap-around."""
+
+    def test_long_prompt_matches_sequential_decode(self, windowed):
+        cfg, model, params = windowed
+        assert cfg.sliding_window == 8
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 1,
+                                  cfg.vocab_size)
+        lw, cw = model.prefill(params, model.init_cache(2, 32), tokens=toks)
+        ls, cs = _sequential_prefill(model, params, toks, 32)
+        np.testing.assert_allclose(np.asarray(lw), np.asarray(ls),
+                                   atol=1e-5, rtol=1e-4)
+        _assert_trees_close(cw, cs, atol=1e-2)   # bf16 K/V rows
+
+    def test_chunk_sizes_agree_after_wrap(self, windowed):
+        cfg, model, params = windowed
+        toks = jax.random.randint(jax.random.PRNGKey(4), (1, 20), 1,
+                                  cfg.vocab_size)
+        l8, _ = model.prefill(params, model.init_cache(1, 32), tokens=toks,
+                              chunk=8)
+        l1, _ = model.prefill(params, model.init_cache(1, 32), tokens=toks,
+                              chunk=1)
+        l5, _ = model.prefill(params, model.init_cache(1, 32), tokens=toks,
+                              chunk=5)
+        np.testing.assert_allclose(np.asarray(l8), np.asarray(l1),
+                                   atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(l8), np.asarray(l5),
+                                   atol=1e-5, rtol=1e-4)
+
+    def test_generate_serves_wrapping_prompt(self, windowed):
+        """End to end: generate() no longer falls back to sequential for
+        ring-wrapping prompts; tokens match the sequential path."""
+        cfg, model, params = windowed
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 1,
+                                    cfg.vocab_size)
+        o1 = generate(model, params, prompt, steps=5)
+        o2 = generate(model, params, prompt, steps=5, prefill="sequential")
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+class TestPrefillChunkKnob:
+    def test_config_knob_routes_generate(self, tiny):
+        cfg, _, _ = tiny
+        from dataclasses import replace
+        model = build_model(replace(cfg, prefill_chunk=3))
+        params = model.init(jax.random.PRNGKey(0))
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 1,
+                                    cfg.vocab_size)
+        o1 = generate(model, params, prompt, steps=4)
+        ref = build_model(cfg)
+        o2 = generate(ref, params, prompt, steps=4)
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+    def test_generate_prefill_chunk_arg(self, tiny):
+        cfg, model, params = tiny
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 1,
+                                    cfg.vocab_size)
+        o1 = generate(model, params, prompt, steps=4, prefill_chunk=2)
+        o2 = generate(model, params, prompt, steps=4)
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+    def test_engine_chunked_admission_matches_generate(self, tiny):
+        cfg, model, params = tiny
+        prompt = [3, 1, 4, 1, 5, 9, 2, 6]
+        eng = ServeEngine(model, params, slots=2, max_len=64,
+                          prefill_chunk=3)
+        uid = eng.submit(prompt, max_new_tokens=6)
+        res = eng.run()
+        ref = generate(model, params, jnp.asarray([prompt], jnp.int32),
+                       steps=6)
+        assert res[uid] == np.asarray(ref)[0].tolist()
+
+    def test_stale_cache_chunk_guard(self, tiny):
+        """A chunk landed at the wrong cache depth must fail loudly."""
+        cfg, model, params = tiny
+        toks = jnp.ones((2, 4), jnp.int32)
+        _, cache = model.prefill(params, model.init_cache(2, 8), tokens=toks)
+        with pytest.raises(ValueError, match="pos0"):
+            model.apply(params, tokens=toks, cache=cache, write_cache=True,
+                        pos0=0)

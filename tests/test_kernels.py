@@ -12,8 +12,10 @@ from _hypothesis_compat import given, settings, st
 from repro.core.multiplier import ent_digit_planes
 from repro.kernels.ent_matmul.ent_matmul import ent_matmul
 from repro.kernels.ent_matmul.ref import ent_matmul_ref
-from repro.kernels.flash_attention.flash_attention import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention, flash_attention_masked)
+from repro.kernels.flash_attention.ref import (attention_ref,
+                                               masked_attention_ref)
 from repro.kernels.int8_matmul.int8_matmul import int8_matmul
 from repro.kernels.int8_matmul.ref import int8_matmul_ref
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
@@ -159,6 +161,80 @@ class TestFlashAttention:
         want = attention_ref(q, k, v, causal=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=2e-5, rtol=1e-4)
+
+
+class TestMaskedFlashAttention:
+    """The ragged serving-prefill kernel vs the blocked jnp oracle."""
+
+    def _data(self, b, hq, hkv, sq, skv, d):
+        q = jnp.asarray(RNG.normal(size=(b, hq, sq, d)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(b, hkv, skv, d)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(b, hkv, skv, d)).astype(np.float32))
+        return q, k, v
+
+    def test_zero_start_matches_plain_flash(self):
+        q, k, v = self._data(2, 4, 2, 128, 128, 64)
+        start = jnp.zeros((2,), jnp.int32)
+        got = flash_attention_masked(q, k, v, start, interpret=True,
+                                     block_q=64, block_kv=64)
+        want = flash_attention(q, k, v, interpret=True,
+                               block_q=64, block_kv=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_ragged_start_matches_oracle(self):
+        q, k, v = self._data(3, 4, 4, 128, 128, 32)
+        start = jnp.asarray([0, 17, 90], jnp.int32)
+        got = flash_attention_masked(q, k, v, start, interpret=True,
+                                     block_q=32, block_kv=64)
+        want = masked_attention_ref(q, k, v, start=start)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_pad_query_rows_are_exact_zeros(self):
+        q, k, v = self._data(1, 2, 2, 64, 64, 32)
+        start = jnp.asarray([40], jnp.int32)
+        got = np.asarray(flash_attention_masked(q, k, v, start,
+                                                interpret=True,
+                                                block_q=32, block_kv=32))
+        assert np.all(got[0, :, :40] == 0)
+        assert np.any(got[0, :, 40:] != 0)
+
+    def test_q_offset_suffix_chunk(self):
+        """Chunked prefill: queries are the suffix of the kv stream."""
+        q, k, v = self._data(2, 4, 2, 32, 128, 64)
+        start = jnp.asarray([0, 9], jnp.int32)
+        got = flash_attention_masked(q, k, v, start, q_offset=96,
+                                     interpret=True, block_q=32, block_kv=64)
+        want = masked_attention_ref(q, k, v, start=start, q_offset=96)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_sliding_window(self):
+        q, k, v = self._data(1, 4, 2, 128, 128, 64)
+        start = jnp.asarray([13], jnp.int32)
+        got = flash_attention_masked(q, k, v, start, window=32,
+                                     interpret=True, block_q=64, block_kv=32)
+        want = masked_attention_ref(q, k, v, start=start, window=32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_oracle_int8_kv_scale_folding(self):
+        """k/v int8 with per-(slot, head) scales: folding after the dot
+        equals dequantize-then-attend within f32 round-off."""
+        q, _, _ = self._data(2, 4, 2, 32, 32, 16)
+        kq = jnp.asarray(RNG.integers(-127, 128, (2, 2, 32, 16), np.int8))
+        vq = jnp.asarray(RNG.integers(-127, 128, (2, 2, 32, 16), np.int8))
+        ks = jnp.asarray(RNG.random((2, 2, 32), np.float32) * 0.02 + 1e-3)
+        vs = jnp.asarray(RNG.random((2, 2, 32), np.float32) * 0.02 + 1e-3)
+        got = masked_attention_ref(q, kq.astype(jnp.float32),
+                                   vq.astype(jnp.float32),
+                                   k_scale=ks, v_scale=vs)
+        want = masked_attention_ref(q,
+                                    kq.astype(jnp.float32) * ks[..., None],
+                                    vq.astype(jnp.float32) * vs[..., None])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
 
 
 class TestSSDScan:

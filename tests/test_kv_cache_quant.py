@@ -6,14 +6,14 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced_config
-from repro.models import attention
+from repro.models import attention, kv_cache
 from repro.models.transformer import build_model
 
 
 class TestKVQuantPrimitives:
     def test_quantize_roundtrip(self):
         t = jax.random.normal(jax.random.PRNGKey(0), (2, 1, 4, 16))
-        q, s = attention._quantize_kv(t)
+        q, s = kv_cache.quantize_kv(t)
         assert q.dtype == jnp.int8 and s.dtype == jnp.bfloat16
         deq = q.astype(jnp.float32) * s.astype(jnp.float32)
         # error budget: 0.5*scale rounding + 127 * scale * 2^-8 from the
