@@ -20,8 +20,11 @@ plus, under ``"serving"``, the engine-path throughputs (batched one-pass
 prefill vs the seed's token-by-token prefill, steady-state decode, and
 decode+on-device-sample engine ticks); under ``"flash_prefill"``, the
 masked flash-attention prefill vs the deleted dense-einsum path at
-S0=256; and under ``"sampler"``, the batched single-dispatch sampler vs
-the per-slot host sampling loop it replaced.
+S0=256; under ``"sampler"``, the batched single-dispatch sampler vs the
+per-slot host sampling loop it replaced; and under ``"paged"``, the
+paged-vs-dense KV-cache backends (steady-state decode and slot
+admission — pool adoption + one block-table row vs whole-row splice —
+at B=8).
 """
 
 from __future__ import annotations
@@ -213,6 +216,93 @@ def serving_benches(s0=64, batch=4, decode_steps=16):
     return rows, record
 
 
+def paged_cache_benches(slots=8, s0=64, decode_steps=8, page_size=16):
+    """Paged vs dense KV-cache serving paths at B=8.
+
+    ``paged_decode``: the steady-state batched decode step through
+    ``PagedCache`` (page-pool gather + block tables) against the same
+    step through ``DenseCache`` — the gather indirection is the price of
+    admission-by-index.  ``paged_admission``: admitting one prefilled
+    slot into the [slots, max_len] batch cache — the pre-paged engine
+    spliced whole [max_len] rows into every layer's cache; the paged
+    engine adopts the shared pool (the admission prefill already wrote
+    the pages through a block-table view) and moves ONE [pages_per_slot]
+    int32 table row.  Returns (csv_rows, record); the record lands in
+    BENCH_ent_matmul.json under "paged".
+    """
+    from repro.configs import get_config, reduced_config
+    from repro.models.transformer import build_model
+    from repro.runtime.serve_loop import make_serve_step
+
+    cfg = reduced_config(get_config("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_len = s0 + 8 * decode_steps
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (slots, s0)),
+                          jnp.int32)
+    step = make_serve_step(model)
+    tok0 = jnp.zeros((slots,), jnp.int32)
+
+    def decode_us(kind):
+        kw = {"page_size": page_size} if kind == "paged" else {}
+        _, cache0 = model.prefill(
+            params, model.init_cache(slots, max_len, kind=kind, **kw),
+            tokens=prompts)
+
+        def run():
+            cache, logits = cache0, None
+            for _ in range(decode_steps):
+                logits, cache = step(params, cache, tok0)
+            return logits
+
+        jax.block_until_ready(run())   # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = run()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / (5 * decode_steps) * 1e6
+
+    t_dense, t_paged = decode_us("dense"), decode_us("paged")
+
+    # admission: one slot's prefilled state merged into the batch cache
+    full_d = model.init_cache(slots, max_len)["layers"]
+    one_d = model.prefill(params, model.init_cache(1, max_len),
+                          tokens=prompts[:1])[1]["layers"]
+    full_p = model.init_cache(slots, max_len, kind="paged",
+                              page_size=page_size)["layers"]
+    one_p = tuple(c.prefill_view(0) for c in full_p)
+    splice = jax.jit(lambda full, one, slot: jax.tree.map(
+        lambda f, n: jax.lax.dynamic_update_slice_in_dim(
+            f, n.astype(f.dtype), slot, 1), full, one))
+    admit = jax.jit(lambda full, one, slot: tuple(
+        f.admit(o, slot) for f, o in zip(full, one)))
+    t_splice = _time_us(splice, full_d, one_d, 3)
+    t_admit = _time_us(admit, full_p, one_p, 3)
+
+    rows = [
+        (f"dense_decode_b{slots}", t_dense,
+         "steady-state decode step, DenseCache"),
+        (f"paged_decode_b{slots}", t_paged,
+         "steady-state decode step, PagedCache (pool gather)"),
+        (f"row_splice_admission_b{slots}", t_splice,
+         "slot admission: whole [max_len]-row splice (pre-paged engine)"),
+        (f"paged_admission_b{slots}", t_admit,
+         "slot admission: pool adoption + one block-table row"),
+    ]
+    record = {
+        "slots": slots, "s0": s0, "max_len": max_len,
+        "page_size": page_size, "backend": jax.default_backend(),
+        "us_decode_dense": round(t_dense, 2),
+        "us_decode_paged": round(t_paged, 2),
+        "decode_tok_s_paged": round(slots / (t_paged * 1e-6), 1),
+        "us_admission_row_splice": round(t_splice, 2),
+        "us_admission_paged": round(t_admit, 2),
+        "admission_speedup_paged_vs_row_splice": round(t_splice / t_admit, 3),
+    }
+    return rows, record
+
+
 def flash_prefill_benches(s0=256, batch=4, heads=8, kv_heads=2, head_dim=64):
     """Masked flash prefill vs the deleted dense-einsum path, op level.
 
@@ -356,6 +446,12 @@ def kernel_benches(quick: bool = False):
     prows, precord = sampler_benches(vocab=4096 if quick else 32768)
     rows += prows
     record["sampler"] = precord
+    # paged-vs-dense cache backends: decode + admission at B=8 (--quick
+    # keeps the canonical slots=8 shape; only the decode loop shrinks)
+    grows, grecord = paged_cache_benches(
+        **({"decode_steps": 4, "s0": 32} if quick else {}))
+    rows += grows
+    record["paged"] = grecord
 
     with open("BENCH_ent_matmul.json", "w") as f:
         json.dump(record, f, indent=1)

@@ -2,6 +2,13 @@
 ServeEngine — batched one-pass prefill on admission, per-slot EOS stop,
 finished slots refilled while the rest keep decoding, streamed tokens.
 
+The engine runs on the PAGED KV-cache backend by default: admission
+allocates fixed-size pages from a shared pool and prefills straight
+through the slot's block-table view (page indices move, cache rows
+never do), and a finished request's pages return to the pool.  Pass
+``cache_kind="dense"`` / ``"ring"`` to ``ServeEngine`` for the row
+backends; every backend decodes bit-identically.
+
     PYTHONPATH=src python examples/serve_engine.py
 """
 
@@ -29,16 +36,22 @@ def on_token(uid, tok, done):
     if done:
         print(f"  request {uid}: done after {stream[uid]} streamed tokens")
 
-engine = ServeEngine(model, params, slots=2, max_len=64, on_token=on_token)
+engine = ServeEngine(model, params, slots=2, max_len=64, on_token=on_token,
+                     page_size=16)
 uids = [engine.submit(p, max_new_tokens=8) for p in prompts]
+stats = engine.page_stats
 print(f"submitted {len(uids)} requests (prompt lens "
-      f"{[len(p) for p in prompts]}) into 2 slots")
+      f"{[len(p) for p in prompts]}) into 2 slots "
+      f"[{engine.cache_kind} cache, {stats['total']}-page pool]")
 
 t0 = time.time()
 results = engine.run()
 dt = time.time() - t0
 total = sum(len(v) for v in results.values())
-print(f"served {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s)")
+stats = engine.page_stats
+print(f"served {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s); "
+      f"all pages returned to the pool: "
+      f"{stats['free'] == stats['total']}")
 
 # the engine's continuous batching is exact: same greedy tokens as a
 # dedicated generate() call per request

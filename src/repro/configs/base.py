@@ -57,6 +57,10 @@ class ModelConfig:
     # shot up to the KV ring width, then auto-chunk at the ring width);
     # bounds peak prefill activation memory at O(chunk * window)
     prefill_chunk: int | None = None
+    # decode KV-cache backend: "auto" (ring for sliding-window models,
+    # dense otherwise) | "dense" | "ring" | "paged" (page pool + block
+    # tables — what the ServeEngine admits into)
+    cache_kind: str = "auto"
     tie_embeddings: bool = False
     moe: MoEConfig | None = None
     ssm: SSMConfig | None = None

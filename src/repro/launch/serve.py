@@ -40,6 +40,15 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: process prompts in chunks of "
                          "this many tokens (0 = one shot / ring-width auto)")
+    ap.add_argument("--cache-kind", default="auto",
+                    choices=["auto", "dense", "ring", "paged"],
+                    help="KV-cache backend (auto: engine picks paged, or "
+                         "ring for sliding-window archs)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged backend: tokens per page (0 = default)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="paged backend: pool size in pages (0 = full "
+                         "provisioning, slots * pages-per-slot)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0,
                     help="on-device sampler top-k truncation (0 = off)")
@@ -68,7 +77,10 @@ def main():
         n_req = 2 * args.batch
         max_len = 2 * args.prompt_len + args.steps + 8
         engine = ServeEngine(model, params, slots=slots, max_len=max_len,
-                             prefill_chunk=chunk, top_k=top_k, top_p=top_p)
+                             prefill_chunk=chunk, top_k=top_k, top_p=top_p,
+                             cache_kind=args.cache_kind,
+                             page_size=args.page_size or None,
+                             pages=args.pages or None)
         lens = rng.integers(max(1, args.prompt_len // 2),
                             args.prompt_len + 1, n_req)
         t0 = time.time()
@@ -79,7 +91,7 @@ def main():
         results = engine.run()
         dt = time.time() - t0
         total = sum(len(v) for v in results.values())
-        print(f"engine: served {n_req} ragged requests "
+        print(f"engine[{engine.cache_kind}]: served {n_req} ragged requests "
               f"(prompt lens {lens.min()}..{lens.max()}) on {slots} slots: "
               f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s)")
         uid0 = min(results)
@@ -92,7 +104,9 @@ def main():
     t0 = time.time()
     out = generate(model, params, prompts, steps=args.steps,
                    temperature=args.temperature, prefill_chunk=chunk,
-                   top_k=top_k, top_p=top_p)
+                   top_k=top_k, top_p=top_p,
+                   cache_kind=None if args.cache_kind == "auto"
+                   else args.cache_kind)
     dt = time.time() - t0
     print(f"generated {args.batch}x{args.steps} tokens in {dt:.2f}s "
           f"({args.batch*args.steps/dt:.1f} tok/s)")

@@ -1,23 +1,27 @@
 """GQA/MHA attention layer with RoPE, sliding window, and KV cache decode.
 
 Training/prefill run the flash-attention op (Pallas on TPU, oracle on
-CPU).  Decode maintains a KV cache; models with a sliding window use a
-ring buffer of size ``window`` (slot = pos % window) so the long_500k
-cell carries O(window) state instead of O(seq).
+CPU).  Decode maintains a KV cache behind the first-class backend API in
+:mod:`repro.models.kv_cache`: ``DenseCache`` (contiguous rows),
+``RingCache`` (sliding-window ring — O(window) state for the long_500k
+cell) or ``PagedCache`` (page pool + block tables for the serving
+engine).
 
 Serving paths (``decode_step`` / ``prefill_step``) share one data path:
-cache writes go through :mod:`repro.models.kv_cache` and the attention
-itself through ``attn_ops.masked_attention`` — a tiled online-softmax
-core (Pallas with scalar-prefetch ``start`` on TPU, a blocked jnp oracle
-on CPU) instead of the dense -1e30-masked einsum the seed carried in
-duplicate.  ``prefill_step`` takes a ``pos0`` chunk offset so prompts
-longer than the sliding-window ring are prefilled in chunks that write
-the cache through (see ``transformer.Model.prefill``).
+placement and read-back go through the cache protocol
+(``write_token``/``token_view``, ``write_prompt``/``context``) and the
+attention itself through ``attn_ops.masked_attention`` — a tiled
+online-softmax core (Pallas with scalar-prefetch ``start`` on TPU, a
+blocked jnp oracle on CPU).  The layer no longer knows which backend it
+is talking to: the ring wrap/validity logic that used to live inline
+here is owned by ``RingCache``, and ``PagedCache`` gathers its pages
+back into the same position-ordered view, which is what makes paged
+decode bit-identical to dense.  ``prefill_step`` takes a ``pos0`` chunk
+offset so prompts longer than the sliding-window ring are prefilled in
+chunks that write the cache through (see ``transformer.Model.prefill``).
 """
 
 from __future__ import annotations
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -71,19 +75,59 @@ def cache_len(cfg: ModelConfig, max_len: int) -> int:
     return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
 
 
+def resolve_cache_kind(cfg: ModelConfig, kind: str | None) -> str:
+    """"auto" (or None) -> ring for sliding-window models, dense else."""
+    if kind in (None, "auto"):
+        return "ring" if cfg.sliding_window else "dense"
+    return kind
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
-               quantized: bool = False):
+               quantized: bool = False, kind: str = "auto",
+               page_size: int | None = None, pages: int | None = None,
+               mapped: bool = True):
+    """Build one attention layer's KV cache backend.
+
+    ``kind``: "auto" | "dense" | "ring" | "paged".  int8-KV
+    (``quantized``) halves the decode working set — the dominant HBM
+    term at long context (§Perf) — and is supported by every backend
+    (PagedCache stores the scales per page).  ``page_size``/``pages``/
+    ``mapped`` configure the paged pool (see ``kv_cache.paged_init``).
+    """
+    kind = resolve_cache_kind(cfg, kind)
+    if kind == "paged":
+        if cfg.sliding_window:
+            raise ValueError(
+                "PagedCache carries no sliding-window mask; windowed "
+                "models serve through the ring backend (kind='ring')")
+        return kv_cache.paged_init(
+            batch, max_len, cfg.num_kv_heads, cfg.head_dim, dtype,
+            quantized=quantized,
+            page_size=page_size or kv_cache.DEFAULT_PAGE_SIZE,
+            pages=pages, mapped=mapped)
+    if kind == "ring" and not cfg.sliding_window:
+        raise ValueError("RingCache requires cfg.sliding_window")
+    if kind == "dense" and cfg.sliding_window:
+        raise ValueError(
+            "sliding-window models must use the ring cache: the dense "
+            "backend carries no window mask")
+    if kind not in ("dense", "ring"):
+        raise ValueError(f"unknown cache kind {kind!r}")
     w = cache_len(cfg, max_len)
     shape = (batch, w, cfg.num_kv_heads, cfg.head_dim)
+    kw = {}
     if quantized:
-        # int8 KV cache with per-(slot, head) scales: halves the decode
-        # working set — the dominant HBM term at long context (§Perf)
+        # int8 KV cache with per-(slot, head) scales
         sshape = shape[:-1] + (1,)
-        return {"k": jnp.zeros(shape, jnp.int8),
-                "v": jnp.zeros(shape, jnp.int8),
-                "k_s": jnp.zeros(sshape, jnp.bfloat16),
-                "v_s": jnp.zeros(sshape, jnp.bfloat16)}
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        kw = {"k_s": jnp.zeros(sshape, jnp.bfloat16),
+              "v_s": jnp.zeros(sshape, jnp.bfloat16)}
+        dtype = jnp.int8
+    if kind == "ring":
+        return kv_cache.RingCache(k=jnp.zeros(shape, dtype),
+                                  v=jnp.zeros(shape, dtype),
+                                  window=cfg.sliding_window, **kw)
+    return kv_cache.DenseCache(k=jnp.zeros(shape, dtype),
+                               v=jnp.zeros(shape, dtype), **kw)
 
 
 def _scale_op(s):
@@ -101,18 +145,19 @@ def _finish(cfg: ModelConfig, p, out):
 def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
     """One-token decode.  x: [B, 1, D]; pos: scalar int32 cache index, or a
     per-sequence [B] vector (continuous batching: each serving slot sits at
-    its own depth).
+    its own depth).  ``cache`` is any :class:`kv_cache.KVCache` backend.
 
-    Returns (y [B, 1, D], updated cache).  Keys are rotated at write time;
-    ring slots are masked by reconstructing each slot's absolute position
-    from ``pos`` (scattered positions — passed to the shared attention
-    core as an explicit ``valid`` mask).  ``start`` ([B] int32, optional)
-    is the number of left-pad slots per sequence for ragged batches: RoPE
-    positions become ``pos - start`` (real tokens count from 0) and slots
-    below ``start`` are masked out of the attention forever.  Supports
-    bf16 and quantized (int8 + per-head scale) caches; scales are folded
-    EXACTLY into the attention dots (K: after the q.k dot; V: into the
-    probabilities), so int8 KV changes bytes, not math beyond round-off.
+    Returns (y [B, 1, D], updated cache).  Keys are rotated at write
+    time; the backend places the row (``write_token``) and hands back the
+    contraction operands plus a per-slot validity mask (``token_view`` —
+    the ring backend reconstructs each slot's absolute position, the
+    paged backend gathers its pages into position order).  ``start``
+    ([B] int32, optional) is the number of left-pad slots per sequence
+    for ragged batches: RoPE positions become ``pos - start`` and slots
+    below ``start`` are masked out of the attention forever.  int8-KV
+    scales are folded EXACTLY into the attention dots (K: after the q.k
+    dot; V: into the probabilities), so int8 KV changes bytes, not math
+    beyond round-off.
     """
     b = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -122,38 +167,23 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
                else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
     positions = (pos_b - start_b)[:, None]
     q, k, v = _project(cfg, p, x, positions)          # q: [B,1,H,hd]
-    w = cache["k"].shape[1]
-    slot = pos % w if cfg.sliding_window else pos
 
-    new, _, _, _, _ = kv_cache.write(
-        cache, k, v, lambda c, n: kv_cache.token_update(c, n, slot, per_seq))
+    new = cache.write_token(k, v, pos, per_seq)
+    kop, vop, ks, vs, valid = new.token_view(pos_b, start_b)
 
-    # absolute position held by each ring slot (== slot index when the
-    # cache is not a ring buffer)
-    idx = jnp.arange(w)[None, :]
-    if cfg.sliding_window:
-        slot_pos = pos_b[:, None] - ((pos_b[:, None] - idx) % w)
-    else:
-        slot_pos = jnp.broadcast_to(idx, (b, w))
-    valid = ((slot_pos >= 0) & (slot_pos <= pos_b[:, None])
-             & (slot_pos >= start_b[:, None]))
-    if cfg.sliding_window:
-        valid &= slot_pos > pos_b[:, None] - cfg.sliding_window
-
-    # attention against the whole cache through the shared masked core
-    # (the ring mask is position-scattered, so it rides as an explicit
-    # ``valid`` [B, 1, W] — decode-sized, never O(S^2)).  The cache stays
-    # in its storage dtype — f32 happens only in the contraction
-    # accumulator (preferred_element_type), never as a materialized f32
-    # copy of the multi-GB cache.
+    # attention against the whole cache view through the shared masked
+    # core (the mask is position-scattered for rings, so it rides as an
+    # explicit ``valid`` [B, 1, W] — decode-sized, never O(S^2)).  The
+    # cache stays in its storage dtype — f32 happens only in the
+    # contraction accumulator, never as a materialized f32 copy of the
+    # multi-GB cache.
     dt = L.cdtype(cfg)
-    quantized = "k_s" in new
-    kop = new["k"] if not quantized else new["k"].astype(dt)
-    vop = new["v"] if not quantized else new["v"].astype(dt)
+    if kop.dtype == jnp.int8:
+        kop, vop = kop.astype(dt), vop.astype(dt)
     out = attn_ops.masked_attention(
         q.transpose(0, 2, 1, 3), kop.transpose(0, 2, 1, 3),
         vop.transpose(0, 2, 1, 3), valid=valid[:, None, :],
-        k_scale=_scale_op(new.get("k_s")), v_scale=_scale_op(new.get("v_s")))
+        k_scale=_scale_op(ks), v_scale=_scale_op(vs))
     return _finish(cfg, p, out), new
 
 
@@ -162,54 +192,41 @@ def prefill_step(cfg: ModelConfig, p, x, cache, start=None, pos0: int = 0):
     of ``decode_step``.  x: [B, S, D] -> (y [B, S, D], updated cache).
 
     All S keys/values are rotated and written to slots ``pos0 .. pos0+S-1``
-    (wrapping modulo the ring width for sliding-window caches) in one
-    shot, and every query attends through the SAME masked flash core and
-    mask semantics as ``decode_step`` — on the shared jnp oracle path
-    (CPU, where the parity tests pin it) the result is bit-identical to
+    (the backend wraps/pages them as its layout demands) in one shot, and
+    every query attends through the SAME masked flash core and mask
+    semantics as ``decode_step`` — on the shared jnp oracle path (CPU,
+    where the parity tests pin it) the result is bit-identical to
     stepping the prompt token by token; on TPU prefill runs the Pallas
-    kernel while decode keeps the oracle (the ring ``valid`` mask), so
-    parity there is exact-math at round-off (atol) level.
+    kernel while decode keeps the oracle (the explicit ``valid`` mask),
+    so parity there is exact-math at round-off (atol) level.
 
     ``pos0`` (static int) is the chunk offset for chunked prefill: the
-    queries attend over the retained context (the last ``min(pos0, W)``
-    cache slots, gathered into position order) plus the chunk itself.
-    ``pos0=0`` is the one-shot prefill, which attends over the fresh
+    queries attend over the retained context (``cache.context(pos0)`` —
+    the prior rows gathered into position order BEFORE the write, since
+    a ring chunk may evict exactly the slots the earliest queries still
+    attend to) plus the chunk itself.  ``pos0=0`` attends over the fresh
     K/V directly — no cache read-back at all.  Each call requires
     S <= cache width; ``Model.prefill`` chunks longer prompts.
     """
     b, s, _ = x.shape
-    w = cache["k"].shape[1]
     pos0 = int(pos0)
-    ring = cfg.sliding_window is not None
-    if s > w:
-        raise ValueError(
-            f"prefill chunk length {s} exceeds cache width {w}; use chunked "
-            "prefill (Model.prefill splits prompts beyond the ring width)")
-    if not ring and pos0 + s > w:
-        raise ValueError(
-            f"prefill chunk [{pos0}, {pos0 + s}) exceeds cache width {w}")
     cols = pos0 + jnp.arange(s, dtype=jnp.int32)
     start_b = (jnp.zeros((b,), jnp.int32) if start is None
                else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
     positions = cols[None, :] - start_b[:, None]      # [B, S] relative
     q, k, v = _project(cfg, p, x, positions)
 
-    # context gathered BEFORE the write: chunk writes may evict exactly
-    # the ring slots the earliest queries still attend to
-    ctx = min(pos0, w)
-    idx = (np.arange(pos0 - ctx, pos0) % w) if ctx else None
-
-    new, kf, vf, ksf, vsf = kv_cache.write(
-        cache, k, v, lambda c, n: kv_cache.prompt_update(c, n, pos0, ring))
+    kc, vc, ksc, vsc, ctx = cache.context(pos0)
+    new, kf, vf, ksf, vsf = cache.write_prompt(k, v, pos0)
 
     def cat(prev, fresh):
-        return fresh if idx is None else jnp.concatenate(
-            [prev[:, idx], fresh.astype(prev.dtype)], axis=1)
+        return fresh if prev is None else jnp.concatenate(
+            [prev, fresh.astype(prev.dtype)], axis=1)
 
-    kop, vop = cat(cache["k"], kf), cat(cache["v"], vf)
+    kop, vop = cat(kc, kf), cat(vc, vf)
     ks = vs = None
-    if "k_s" in cache:
-        ks, vs = cat(cache["k_s"], ksf), cat(cache["v_s"], vsf)
+    if new.quantized:
+        ks, vs = cat(ksc, ksf), cat(vsc, vsf)
     dt = L.cdtype(cfg)
     if kop.dtype == jnp.int8:
         kop, vop = kop.astype(dt), vop.astype(dt)
@@ -222,5 +239,5 @@ def prefill_step(cfg: ModelConfig, p, x, cache, start=None, pos0: int = 0):
     out = attn_ops.masked_attention(
         q.transpose(0, 2, 1, 3), kop.transpose(0, 2, 1, 3),
         vop.transpose(0, 2, 1, 3), start=start_local, q_offset=ctx,
-        window=cfg.sliding_window, k_scale=_scale_op(ks), v_scale=_scale_op(vs))
+        window=new.window, k_scale=_scale_op(ks), v_scale=_scale_op(vs))
     return _finish(cfg, p, out), new

@@ -1,26 +1,74 @@
-"""Shared KV-cache write-through helpers for the attention serving paths.
+"""First-class KV-cache API: dense / ring / paged backends, one protocol.
 
-``decode_step``, ``prefill_step`` and the chunked prefill all mutate the
-same cache layout ({k, v} bf16, or {k, v, k_s, v_s} for int8-KV); before
-this module each carried its own near-identical ``upd`` closure.  The
-write is factored into (a) one *placement* function per path — where the
-new rows land — and (b) one ``write`` driver that applies it to every
-leaf, quantizing en route when the cache is int8.
+Before this module the serving stack passed KV state around as untyped
+``{k, v[, k_s, v_s]}`` dicts with per-path placement closures: the ring
+(sliding-window) wrap logic was smeared across ``attention.decode_step``,
+``attention.prefill_step`` and ``Model.prefill``, and the ServeEngine
+could only admit a request by splicing whole contiguous cache rows.  The
+cache layer is now a small protocol implemented by registered-pytree
+dataclasses:
 
-Placement semantics:
+``CacheSlots``
+    The slot-management half, shared by every per-layer cache (including
+    the SSM conv/SSD state): ``prefill_view`` / ``admit`` / ``free_slot``
+    — what the continuous-batching engine needs to move one slot's state
+    in and out of the batch without knowing the layout.
 
-* :func:`token_update` — one row per sequence at ``slot`` (scalar, or a
-  per-sequence [B] vector for continuous batching);
-* :func:`prompt_update` — S contiguous rows at ``pos0`` (chunked
-  prefill), wrapping modulo the ring width for sliding-window caches.
+``KVCache`` (DenseCache | RingCache | PagedCache)
+    The attention half: where rows land (``write_token`` /
+    ``write_prompt``), how they read back as contraction operands
+    (``token_view`` / ``context``).  All *math* (RoPE, masked flash
+    attention, scale folding) stays in ``models/attention.py``; the
+    backend only answers layout questions.
+
+Backends:
+
+* :class:`DenseCache` — contiguous ``[B, W, H, hd]`` rows, slot = pos.
+* :class:`RingCache` — sliding-window ring of ``window`` slots
+  (slot = pos % W), absorbing the wrap placement and the scattered-slot
+  validity mask that used to live in ``attention.py``.
+* :class:`PagedCache` — fixed-size pages in a shared pool plus per-slot
+  int32 block tables (vLLM-style).  Reads gather pages back into
+  position order and feed the same ``ops.masked_attention`` core, so
+  decode and chunked prefill are bit-identical to :class:`DenseCache`
+  (page 0 is a reserved null page; unallocated table entries point at it
+  and are masked out).  int8-KV scales are stored per page alongside the
+  values.  Admission allocates pages instead of copying rows, and a
+  freed slot returns its pages to the pool — the data-reuse-through-
+  indirection move EN-T makes at the MAC level, applied to cache slots.
+
+Every class is a frozen dataclass registered with
+``jax.tree_util.register_dataclass``: instances flow through ``jit`` /
+``scan`` / ``vmap`` like the dicts they replace, with layout constants
+(page size, window) riding as static metadata.
 """
 
 from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+DEFAULT_PAGE_SIZE = 16
+
+
+def _register(meta=()):
+    """Class decorator: register a cache dataclass as a jax pytree with
+    ``meta`` as static fields and everything else as data leaves."""
+    def reg(cls):
+        fields = [f.name for f in dataclasses.fields(cls)]
+        jax.tree_util.register_dataclass(
+            cls, data_fields=[f for f in fields if f not in meta],
+            meta_fields=list(meta))
+        return cls
+    return reg
+
+
+# --- placement / quantization primitives -------------------------------------
 
 def quantize_kv(t):
     """[B, S, H, hd] -> (int8 values, bf16 per-(slot, head) scale)."""
@@ -44,34 +92,319 @@ def prompt_update(c, new, pos0: int, ring: bool):
     """Write [B, S, ...] rows at slots ``pos0 .. pos0+S-1`` (prefill).
 
     ``pos0`` is a static chunk offset; with ``ring`` the slots wrap
-    modulo the cache width (sliding-window chunked prefill).
+    modulo the cache width (sliding-window chunked prefill).  A chunk
+    longer than the ring (S > W) laps itself: only the last W rows are
+    still visible, so the overwritten prefix is dropped up front — the
+    old scatter-with-duplicate-indices write had unspecified order and
+    could keep a stale lap's rows.
     """
     s, w = new.shape[1], c.shape[1]
     new = new.astype(c.dtype)
+    if ring and s > w:                  # multi-wrap: keep the last W rows
+        new = new[:, s - w:]
+        pos0, s = pos0 + (s - w), w
     if not ring or pos0 + s <= w:       # contiguous, no wrap
         return jax.lax.dynamic_update_slice_in_dim(c, new, pos0, 1)
     idx = (pos0 + np.arange(s)) % w     # static wrapped slot indices
     return c.at[:, idx].set(new)
 
 
-def write(cache: dict, k, v, upd) -> dict:
-    """Apply placement ``upd(leaf, new) -> leaf`` to every cache leaf,
-    quantizing k/v first when the cache is int8.  Returns the new cache
-    pieces plus the operand views the attention should contract against
-    (the freshly written values, in storage form):
+# --- protocol ----------------------------------------------------------------
 
-        (new_cache, k_op, v_op, k_scale, v_scale)
+class CacheSlots:
+    """Slot-management protocol: how the serving engine moves ONE slot's
+    state in and out of a batched cache.
 
-    k_op/v_op are int8 for quantized caches (with [B, S, H, 1] scales)
-    — bit-identical to reading the written slots back, without the
-    cache round-trip.
+    These methods run on the ENGINE's view of the cache, where every
+    array leaf carries the model's ``[G]`` layer-group axis in front
+    (``[G, B, ...]``): the batch axis of a stacked leaf is axis 1.
     """
-    if "k_s" in cache:
-        kq, ks = quantize_kv(k)
-        vq, vs = quantize_kv(v)
-        new = {"k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
-               "k_s": upd(cache["k_s"], ks), "v_s": upd(cache["v_s"], vs)}
-        return new, kq, vq, ks, vs
-    ks, vs = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
-    new = {"k": upd(cache["k"], ks), "v": upd(cache["v"], vs)}
-    return new, ks, vs, None, None
+
+    def prefill_view(self, slot):
+        """A fresh single-slot cache for admission prefill.  Row-based
+        backends return zeroed state; PagedCache returns a live view of
+        the shared pool restricted to ``slot``'s block-table row, so the
+        admission prefill writes pages through with no copy at all."""
+        del slot
+        return jax.tree.map(
+            lambda c: jnp.zeros(c.shape[:1] + (1,) + c.shape[2:], c.dtype),
+            self)
+
+    def admit(self, one, slot):
+        """Merge a prefilled single-slot cache back at ``slot``."""
+        return jax.tree.map(
+            lambda f, n: jax.lax.dynamic_update_slice_in_dim(
+                f, n.astype(f.dtype), slot, 1), self, one)
+
+    def free_slot(self, slot):
+        """Drop ``slot``'s state (no-op for row backends: stale rows are
+        masked by pos/start; PagedCache unmaps the block-table row)."""
+        del slot
+        return self
+
+
+class KVCache(CacheSlots):
+    """Attention-cache protocol on top of :class:`CacheSlots`.
+
+    Layout contract (unstacked, as seen inside one layer's serving
+    step): the *logical* kv view is ``width`` rows per sequence in
+    position-or-slot order; ``token_view``/``context`` return operands
+    in storage layout ``[B, W, H, *]`` plus (for decode) a ``[B, W]``
+    validity mask.  ``window`` is the attention sliding window the
+    backend implies (ring only) — dense/paged carry no window mask.
+    """
+
+    window: int | None = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_s is not None
+
+    @property
+    def width(self) -> int:
+        """Logical kv view length (slots per sequence)."""
+        return self.k.shape[-3]
+
+    def _write(self, upd, k, v):
+        """Apply placement ``upd(leaf, new) -> leaf`` to every leaf,
+        quantizing k/v en route when the cache is int8.  Returns the new
+        cache plus the freshly written values in storage form (the
+        operand views prefill contracts against, bit-identical to
+        reading the written slots back without the round-trip)."""
+        if self.k_s is not None:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            new = replace(self, k=upd(self.k, kq), v=upd(self.v, vq),
+                          k_s=upd(self.k_s, ks), v_s=upd(self.v_s, vs))
+            return new, kq, vq, ks, vs
+        kc, vc = k.astype(self.k.dtype), v.astype(self.v.dtype)
+        return (replace(self, k=upd(self.k, kc), v=upd(self.v, vc)),
+                kc, vc, None, None)
+
+    # subclasses: write_token / token_view / write_prompt / context
+
+
+@_register()
+@dataclass(frozen=True)
+class DenseCache(KVCache):
+    """Contiguous [B, W, H, hd] rows; slot = absolute position."""
+
+    k: jax.Array
+    v: jax.Array
+    k_s: jax.Array | None = None   # [B, W, H, 1] bf16 scales (int8 KV)
+    v_s: jax.Array | None = None
+
+    def write_token(self, k, v, pos, per_seq: bool):
+        new, *_ = self._write(
+            lambda c, n: token_update(c, n, pos, per_seq), k, v)
+        return new
+
+    def token_view(self, pos_b, start_b):
+        b, w = pos_b.shape[0], self.width
+        idx = jnp.arange(w)[None, :]
+        slot_pos = jnp.broadcast_to(idx, (b, w))
+        valid = ((slot_pos >= 0) & (slot_pos <= pos_b[:, None])
+                 & (slot_pos >= start_b[:, None]))
+        return self.k, self.v, self.k_s, self.v_s, valid
+
+    def write_prompt(self, k, v, pos0: int):
+        s, w = k.shape[1], self.width
+        if pos0 + s > w:
+            raise ValueError(
+                f"prefill chunk [{pos0}, {pos0 + s}) exceeds cache width {w}")
+        return self._write(
+            lambda c, n: prompt_update(c, n, pos0, ring=False), k, v)
+
+    def context(self, pos0: int):
+        """Rows [pos0-ctx, pos0) in position order, gathered BEFORE the
+        chunk write (ring chunk writes may evict exactly the slots the
+        earliest queries still attend to).  Returns
+        (k, v, k_s, v_s, ctx_len); Nones at pos0 == 0."""
+        if pos0 == 0:
+            return None, None, None, None, 0
+        sl = lambda c: None if c is None else c[:, :pos0]
+        return sl(self.k), sl(self.v), sl(self.k_s), sl(self.v_s), pos0
+
+
+@_register(meta=("window",))
+@dataclass(frozen=True)
+class RingCache(KVCache):
+    """Sliding-window ring of W = min(max_len, window) slots; slot =
+    pos % W.  Owns the wrap placement and the scattered-slot validity
+    mask that previously lived inline in ``attention.py``."""
+
+    k: jax.Array
+    v: jax.Array
+    k_s: jax.Array | None = None
+    v_s: jax.Array | None = None
+    window: int = 0                # attention window (static metadata)
+
+    def write_token(self, k, v, pos, per_seq: bool):
+        slot = pos % self.width
+        new, *_ = self._write(
+            lambda c, n: token_update(c, n, slot, per_seq), k, v)
+        return new
+
+    def token_view(self, pos_b, start_b):
+        b, w = pos_b.shape[0], self.width
+        idx = jnp.arange(w)[None, :]
+        # absolute position held by each ring slot
+        slot_pos = pos_b[:, None] - ((pos_b[:, None] - idx) % w)
+        valid = ((slot_pos >= 0) & (slot_pos <= pos_b[:, None])
+                 & (slot_pos >= start_b[:, None])
+                 & (slot_pos > pos_b[:, None] - self.window))
+        return self.k, self.v, self.k_s, self.v_s, valid
+
+    def write_prompt(self, k, v, pos0: int):
+        s, w = k.shape[1], self.width
+        if s > w:
+            raise ValueError(
+                f"prefill chunk length {s} exceeds ring width {w}; use "
+                "chunked prefill (Model.prefill splits prompts beyond the "
+                "ring width)")
+        return self._write(
+            lambda c, n: prompt_update(c, n, pos0, ring=True), k, v)
+
+    def context(self, pos0: int):
+        ctx = min(pos0, self.width)
+        if ctx == 0:
+            return None, None, None, None, 0
+        idx = (np.arange(pos0 - ctx, pos0)) % self.width
+        sl = lambda c: None if c is None else c[:, idx]
+        return sl(self.k), sl(self.v), sl(self.k_s), sl(self.v_s), ctx
+
+
+@_register(meta=("page_size",))
+@dataclass(frozen=True)
+class PagedCache(KVCache):
+    """Fixed-size pages + per-slot block tables over a shared pool.
+
+    ``k``/``v``: ``[P, page, H, hd]`` page pools (page 0 reserved as the
+    null page); ``k_s``/``v_s``: per-page scale pools for int8 KV;
+    ``block_table``: ``[B, pages_per_slot]`` int32 page ids (0 =
+    unmapped).  Reads gather the table back into position order, so the
+    logical view is identical to :class:`DenseCache` and the serving
+    math is bit-identical; writes scatter into the owning page.  Slot
+    admission and release move page *indices*, never rows.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    block_table: jax.Array
+    k_s: jax.Array | None = None
+    v_s: jax.Array | None = None
+    page_size: int = DEFAULT_PAGE_SIZE
+
+    @property
+    def width(self) -> int:
+        return self.block_table.shape[-1] * self.page_size
+
+    def _gather(self, c):
+        """[P, page, ...] pool -> [B, W, ...] position-ordered view."""
+        g = c[self.block_table]
+        return g.reshape((g.shape[0], -1) + c.shape[2:])
+
+    def write_token(self, k, v, pos, per_seq: bool):
+        del per_seq  # the page scatter is per-sequence by construction
+        b = k.shape[0]
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        pp, off = pos_b // self.page_size, pos_b % self.page_size
+        pid = jnp.take_along_axis(self.block_table, pp[:, None], axis=1)[:, 0]
+        new, *_ = self._write(lambda c, n: c.at[pid, off].set(n[:, 0]), k, v)
+        return new
+
+    def token_view(self, pos_b, start_b):
+        b, w = pos_b.shape[0], self.width
+        idx = jnp.arange(w)[None, :]
+        slot_pos = jnp.broadcast_to(idx, (b, w))
+        # unmapped tail pages hold positions > pos: masked by causality,
+        # exactly like a dense cache's unwritten rows
+        valid = ((slot_pos >= 0) & (slot_pos <= pos_b[:, None])
+                 & (slot_pos >= start_b[:, None]))
+        sl = lambda c: None if c is None else self._gather(c)
+        return sl(self.k), sl(self.v), sl(self.k_s), sl(self.v_s), valid
+
+    def write_prompt(self, k, v, pos0: int):
+        s, w = k.shape[1], self.width
+        if pos0 + s > w:
+            raise ValueError(
+                f"prefill chunk [{pos0}, {pos0 + s}) exceeds paged cache "
+                f"width {w}")
+        cols = pos0 + np.arange(s)
+        off = jnp.asarray(cols % self.page_size, jnp.int32)
+        pid = self.block_table[:, cols // self.page_size]     # [B, S]
+        off_b = jnp.broadcast_to(off[None, :], pid.shape)
+        return self._write(lambda c, n: c.at[pid, off_b].set(n), k, v)
+
+    def context(self, pos0: int):
+        if pos0 == 0:
+            return None, None, None, None, 0
+        # gather only the pages covering [0, pos0): chunked prefill cost
+        # stays O(pos0), not O(pool width)
+        bt = self.block_table[:, :-(-pos0 // self.page_size)]
+        sl = lambda c: None if c is None else (
+            c[bt].reshape((bt.shape[0], -1) + c.shape[2:])[:, :pos0])
+        return sl(self.k), sl(self.v), sl(self.k_s), sl(self.v_s), pos0
+
+    # .. engine slot management: indices move, rows don't ..
+    def prefill_view(self, slot):
+        return replace(self, block_table=jax.lax.dynamic_slice_in_dim(
+            self.block_table, slot, 1, axis=-2))
+
+    def admit(self, one, slot):
+        # the view wrote straight through the shared pool; adopting its
+        # pools IS the admission — only indices ever moved
+        del slot
+        return replace(self, k=one.k, v=one.v, k_s=one.k_s, v_s=one.v_s)
+
+    def free_slot(self, slot):
+        return replace(self, block_table=jnp.asarray(
+            self.block_table).at[..., slot, :].set(0))
+
+    def with_table(self, table):
+        """Adopt the engine allocator's host-side block-table mirror
+        ([B, pages_per_slot] int32 page ids) wholesale — one dispatch
+        regardless of how many slots changed."""
+        bt = self.block_table
+        return replace(self, block_table=jnp.broadcast_to(
+            table.astype(bt.dtype), bt.shape))
+
+
+@_register()
+@dataclass(frozen=True)
+class SSMCache(CacheSlots):
+    """Mamba-2 per-slot state (conv window [B, W-1, C] + SSD state
+    [B, H, P, N]).  Joins the slot protocol so the engine moves SSM and
+    attention state through one code path — no layer-type special cases."""
+
+    conv: jax.Array
+    ssd: jax.Array
+
+
+def paged_init(batch: int, max_len: int, kv_heads: int, head_dim: int,
+               dtype, *, quantized: bool = False,
+               page_size: int = DEFAULT_PAGE_SIZE, pages: int | None = None,
+               mapped: bool = True) -> PagedCache:
+    """Build a PagedCache.  ``pages`` sizes the pool (default: full
+    provisioning, batch * pages_per_slot); ``mapped=False`` starts every
+    block table unmapped (engine-managed allocation), else slot ``b``
+    owns pages ``1 + b*pps .. 1 + (b+1)*pps - 1`` (identity mapping — a
+    drop-in DenseCache replacement for model-level use)."""
+    pps = max(1, math.ceil(max_len / page_size))
+    npages = batch * pps if pages is None else pages
+    if mapped and npages < batch * pps:
+        raise ValueError(f"identity mapping needs {batch * pps} pages, "
+                         f"pool has {npages}")
+    shape = (npages + 1, page_size, kv_heads, head_dim)  # +1: null page 0
+    if mapped:
+        table = 1 + np.arange(batch * pps, dtype=np.int32).reshape(batch, pps)
+    else:
+        table = np.zeros((batch, pps), np.int32)
+    kw = {}
+    if quantized:
+        kw = {"k_s": jnp.zeros(shape[:-1] + (1,), jnp.bfloat16),
+              "v_s": jnp.zeros(shape[:-1] + (1,), jnp.bfloat16)}
+        dtype = jnp.int8
+    return PagedCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                      block_table=jnp.asarray(table), page_size=page_size,
+                      **kw)

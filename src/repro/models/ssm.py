@@ -18,6 +18,7 @@ from repro.configs.base import ModelConfig
 from repro.kernels.ssd_scan import ops as ssd_ops
 from repro.kernels.ssd_scan.ref import ssd_decode_step_ref
 from repro.models import layers as L
+from repro.models.kv_cache import SSMCache
 
 
 def dims(cfg: ModelConfig):
@@ -109,13 +110,12 @@ def apply(cfg: ModelConfig, p, x):
 
 # --- Decode ------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, dtype):
+def init_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
     s = cfg.ssm
     d_inner, nheads, conv_dim = dims(cfg)
-    return {
-        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
-        "ssd": jnp.zeros((batch, nheads, s.head_dim, s.state_dim), jnp.float32),
-    }
+    return SSMCache(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        ssd=jnp.zeros((batch, nheads, s.head_dim, s.state_dim), jnp.float32))
 
 
 def decode_step(cfg: ModelConfig, p, x, cache, pos, token_mask=None):
@@ -138,7 +138,7 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos, token_mask=None):
     xbc = jnp.concatenate([xin, bmat, cmat], -1)             # [B, conv_dim]
     if token_mask is not None:
         xbc = xbc * token_mask[:, None].astype(xbc.dtype)
-    hist = jnp.concatenate([cache["conv"], xbc[:, None]], 1)  # [B, W, conv_dim]
+    hist = jnp.concatenate([cache.conv, xbc[:, None]], 1)  # [B, W, conv_dim]
     conv_out = jnp.einsum("bwd,wd->bd", hist.astype(jnp.float32),
                           p["conv"].astype(jnp.float32))
     conv_out = jax.nn.silu(conv_out + p["conv_bias"].astype(jnp.float32)).astype(dtype)
@@ -152,14 +152,14 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos, token_mask=None):
                               + p["dt_bias"].astype(jnp.float32))  # [B,H]
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
 
-    new_ssd, y = ssd_decode_step_ref(cache["ssd"], xh, dt_soft, a, bm, cm)
+    new_ssd, y = ssd_decode_step_ref(cache.ssd, xh, dt_soft, a, bm, cm)
     if token_mask is not None:  # pad step: state carries through unchanged
         new_ssd = jnp.where(token_mask[:, None, None, None], new_ssd,
-                            cache["ssd"])
+                            cache.ssd)
     y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
     y_flat = y.reshape(b, 1, d_inner).astype(dtype)
     out = _gated_out(cfg, p, y_flat, z[:, None])
-    return out, {"conv": new_conv, "ssd": new_ssd}
+    return out, SSMCache(conv=new_conv, ssd=new_ssd)
 
 
 def prefill_step(cfg: ModelConfig, p, x, cache, mask=None):
@@ -186,7 +186,7 @@ def prefill_step(cfg: ModelConfig, p, x, cache, mask=None):
     xbc = jnp.concatenate([xin, bmat, cmat], -1)             # [B, S, conv_dim]
     if mask is not None:
         xbc = xbc * mask[..., None].astype(xbc.dtype)
-    hist = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], 1)
+    hist = jnp.concatenate([cache.conv.astype(xbc.dtype), xbc], 1)
     new_conv = hist[:, slen:]                                # last W-1 columns
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
 
@@ -218,8 +218,8 @@ def prefill_step(cfg: ModelConfig, p, x, cache, mask=None):
 
     tmask = (jnp.ones((b, slen), bool) if mask is None else mask)
     new_ssd, ys = jax.lax.scan(
-        step, cache["ssd"],
+        step, cache.ssd,
         (jnp.arange(slen), jnp.moveaxis(dtt, 1, 0), jnp.moveaxis(tmask, 1, 0)))
     y_flat = jnp.moveaxis(ys, 0, 1).reshape(b, slen, d_inner).astype(dtype)
     out = _gated_out(cfg, p, y_flat, z)
-    return out, {"conv": new_conv.astype(cache["conv"].dtype), "ssd": new_ssd}
+    return out, SSMCache(conv=new_conv.astype(cache.conv.dtype), ssd=new_ssd)

@@ -297,9 +297,19 @@ class Model:
         return out
 
     # .. decode ..
-    def init_cache(self, batch: int, max_len: int):
+    def init_cache(self, batch: int, max_len: int, kind: str | None = None,
+                   **cache_kw):
+        """Decode cache: one backend instance per layer position.
+
+        ``kind`` picks the attention KV backend ("auto" | "dense" |
+        "ring" | "paged"; default ``cfg.cache_kind`` — auto resolves to
+        ring for sliding-window models, dense otherwise).  ``cache_kw``
+        (``page_size``, ``pages``, ``mapped``) configures the paged
+        pool; see ``kv_cache.paged_init``.
+        """
         cfg = self.cfg
         dtype = L.cdtype(cfg)
+        kind = kind if kind is not None else cfg.cache_kind
 
         def one_group(_):
             caches = []
@@ -307,7 +317,8 @@ class Model:
                 mixer, _ = spec
                 if mixer == "attn":
                     caches.append(attention.init_cache(
-                        cfg, batch, max_len, dtype, quantized=self.kv_quant))
+                        cfg, batch, max_len, dtype, quantized=self.kv_quant,
+                        kind=kind, **cache_kw))
                 elif mixer == "ssm":
                     caches.append(ssm.init_cache(cfg, batch, dtype))
                 else:
@@ -372,10 +383,11 @@ class Model:
         return logits[:, 0], new_cache
 
     def _attn_cache_width(self, cache) -> int | None:
-        """Slot count of the attention KV ring (None: attention-free)."""
+        """Logical kv width of the attention cache backend (None:
+        attention-free) — the per-chunk prefill bound."""
         for i, (mixer, _) in enumerate(self.cfg.group):
             if mixer == "attn":
-                return cache["layers"][i]["k"].shape[2]   # [G, B, W, H, hd]
+                return cache["layers"][i].width
         return None
 
     def prefill(self, params, cache, tokens=None, embeds=None, pad_mask=None,

@@ -10,13 +10,20 @@ Three layers, bottom-up:
   the sliding-window ring — or a ``prefill_chunk`` knob — are processed
   in fixed-size chunks), with left-padding + attention masking for
   ragged prompt batches and per-sequence EOS early-stop;
-- ``ServeEngine``: a fixed-slot continuous-batching engine.  Requests
+- ``ServeEngine``: a fixed-slot continuous-batching engine over the
+  first-class KV-cache backends (``repro.models.kv_cache``).  Requests
   are admitted into free batch slots by prefilling the newcomer while
   the other slots keep decoding; finished slots are refilled from the
-  queue.  Sampling runs ON DEVICE (``repro.runtime.sampling``): each
-  decode tick is one batched decode dispatch plus one batched sample
-  dispatch, and only [B] int32 tokens cross back to the host — never
-  the [B, V] logits.
+  queue.  With the default PAGED backend, admission allocates
+  fixed-size pages from a shared pool and prefills straight through a
+  block-table view — page indices move, cache rows never do — and a
+  finished request's pages return to the pool; sliding-window models
+  serve through the RING backend (absolute per-slot positions over a
+  window-sized ring, prompts longer than the window included).
+  Sampling runs ON DEVICE (``repro.runtime.sampling``): each decode
+  tick is one batched decode dispatch plus one batched sample dispatch,
+  and only [B] int32 tokens cross back to the host — never the [B, V]
+  logits.
 
 With EN-T quantized params every projection in every one of these paths
 runs the FUSED packed-plane matmul (repro.quant.qdense_apply): per-row
@@ -34,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import kv_cache
 from repro.models.transformer import Model
 from repro.runtime import sampling
 
@@ -80,7 +88,8 @@ def generate(model: Model, params, prompt_tokens, steps: int, *,
              temperature: float = 0.0, key=None, max_len: int | None = None,
              eos_id: int | None = None, pad_id: int = 0, prompt_lens=None,
              prefill: str = "batched", prefill_chunk: int | None = None,
-             top_k: int | None = None, top_p: float | None = None):
+             top_k: int | None = None, top_p: float | None = None,
+             cache_kind: str | None = None):
     """Greedy/temperature generation on top of the batched prefill.
 
     prompt_tokens: [B, S0] int32, LEFT-padded when ragged (``prompt_lens``
@@ -98,6 +107,10 @@ def generate(model: Model, params, prompt_tokens, steps: int, *,
     Sampling is the on-device batched sampler (``repro.runtime.sampling``)
     with one PRNG key per row: ``temperature``/``top_k``/``top_p`` apply
     to every row, and a whole decode step is two device dispatches.
+
+    ``cache_kind`` selects the KV backend ("auto" | "dense" | "ring" |
+    "paged"; default = the model config's ``cache_kind``) — every
+    backend decodes bit-identically on the oracle path.
     """
     prompt_tokens = jnp.asarray(prompt_tokens, jnp.int32)
     if prompt_tokens.ndim != 2 or 0 in prompt_tokens.shape:
@@ -117,7 +130,7 @@ def generate(model: Model, params, prompt_tokens, steps: int, *,
     if prompt_lens is not None:
         mask, start = _pad_mask_from_lens(prompt_lens, b, s0)
 
-    cache = model.init_cache(b, max_len)
+    cache = model.init_cache(b, max_len, kind=cache_kind)
     if start is not None:
         cache["start"] = start
     step = make_serve_step(model)
@@ -199,16 +212,38 @@ class ServeEngine:
     vectors).  Each ``step()`` tick first admits queued requests into free
     slots — the newcomer's prompt is prefilled through the batched cache
     write-through path (bucketed to a power-of-two length, left-padded +
-    masked, chunked at ``prefill_chunk`` when set) and its populated
-    cache row is spliced into the batch cache — then runs ONE batched
-    decode step plus ONE batched on-device sample step for every slot:
-    per-slot temperatures ride in a [slots] vector, each slot draws from
-    its own PRNG key (folded from the engine seed and the request uid,
-    so replays are slot-placement independent), and only the [slots]
+    masked, chunked at ``prefill_chunk`` when set) directly into a
+    single-slot ``prefill_view`` of the batch cache, then merged back
+    with the backend's ``admit`` — then runs ONE batched decode step
+    plus ONE batched on-device sample step for every slot: per-slot
+    temperatures ride in a [slots] vector, each slot draws from its own
+    PRNG key (folded from the engine seed and the request uid, so
+    replays are slot-placement independent), and only the [slots]
     sampled tokens are transferred back.  A slot is freed on EOS or
     ``max_new_tokens`` and immediately becomes refillable, so long and
     short requests share the batch without barriers (continuous
     batching).
+
+    ``cache_kind`` picks the KV backend; the default is PAGED for
+    full-attention models and RING for sliding-window models:
+
+    * "paged" — fixed-size pages + per-slot block tables over a shared
+      pool.  Admission reserves the request's worst case
+      (ceil((prompt + max_new_tokens) / page) pages), maps the prompt's
+      pages from a host free list, and prefills straight through the
+      pool, so admitting a request moves page INDICES, never [max_len]
+      cache rows; decode maps one reserved page at a time as a slot
+      crosses a page boundary, and EOS returns the slot's pages to the
+      pool.  ``pages`` caps the pool (default: full provisioning,
+      slots * ceil(max_len / page_size)) — an undersized pool
+      admission-stalls instead of failing, and in-flight requests can
+      never run out of pages.
+    * "ring" — sliding-window decode: slots still track ABSOLUTE
+      positions while rows live in a ``window``-slot ring, so prompts
+      longer than the window are servable end to end (admission chunks
+      at the ring width).
+    * "dense" — the contiguous row-splice backend (the pre-paged
+      behavior).
 
     ``on_token(uid, token, done)`` streams tokens as they are sampled.
     """
@@ -217,36 +252,69 @@ class ServeEngine:
                  max_len: int = 128, eos_id: int | None = None,
                  pad_id: int = 0, prefill_bucket: int = 8, seed: int = 0,
                  prefill_chunk: int | None = None, top_k: int | None = None,
-                 top_p: float | None = None, on_token=None):
+                 top_p: float | None = None, on_token=None,
+                 cache_kind: str | None = None, page_size: int | None = None,
+                 pages: int | None = None):
         if slots < 1:
             raise ValueError(f"ServeEngine needs at least one slot, got {slots}")
-        if model.cfg.sliding_window and model.cfg.sliding_window < max_len:
-            raise ValueError(
-                "ServeEngine slots track absolute cache positions and do "
-                "not support sliding-window ring buffers yet")
+        if cache_kind in (None, "auto"):
+            cache_kind = "ring" if model.cfg.sliding_window else "paged"
+        self.cache_kind = cache_kind
         self.model, self.params = model, params
         self.slots, self.max_len = slots, max_len
         self.eos_id, self.pad_id = eos_id, pad_id
         self.prefill_bucket = prefill_bucket
         self.prefill_chunk = prefill_chunk
         self.on_token = on_token
-        cache = model.init_cache(slots, max_len)
+        if cache_kind == "paged":
+            self.page_size = page_size or kv_cache.DEFAULT_PAGE_SIZE
+            self._pps = -(-max_len // self.page_size)   # pages per slot
+            self._npages = self._pps * slots if pages is None else pages
+            cache = model.init_cache(slots, max_len, kind="paged",
+                                     page_size=self.page_size,
+                                     pages=self._npages, mapped=False)
+            # host-side page allocator: free list + per-slot page sets +
+            # a block-table mirror, so ticks never sync on the device.
+            # Admission RESERVES each request's worst case (prompt +
+            # max_new_tokens) but maps pages lazily at page boundaries:
+            # mid-decode grabs always draw from the slot's own
+            # reservation, so an undersized pool can only ever stall
+            # admission — never fail a request in flight.
+            self._free_pages = list(range(self._npages, 0, -1))
+            self._slot_pages: dict[int, list[int]] = {}
+            self._slot_reserved: dict[int, int] = {}
+            self._table = np.zeros((slots, self._pps), np.int32)
+        else:
+            cache = model.init_cache(slots, max_len, kind=cache_kind)
         cache["pos"] = jnp.zeros((slots,), jnp.int32)
         cache["start"] = jnp.zeros((slots,), jnp.int32)
         self.cache = cache
         self._decode = make_serve_step(model)
-        self._splice = jax.jit(
-            lambda full, new, slot: jax.tree.map(
-                lambda f, n: jax.lax.dynamic_update_slice_in_dim(
-                    f, n.astype(f.dtype), slot, 1), full, new))
 
-        def _prefill_one(params, toks, mask):
-            c = model.init_cache(1, max_len)
+        # backend-dispatched slot management (kv_cache.CacheSlots): the
+        # SAME three jitted helpers drive dense row splices, ring splices
+        # and paged zero-copy pool adoption — no layer-type or backend
+        # special cases in the tick loop
+        self._view = jax.jit(lambda layers, slot: tuple(
+            c.prefill_view(slot) if hasattr(c, "prefill_view") else c
+            for c in layers))
+        self._admit_slot = jax.jit(lambda full, one, slot: tuple(
+            f.admit(o, slot) if hasattr(f, "admit") else f
+            for f, o in zip(full, one)))
+        self._release = jax.jit(lambda layers, slot: tuple(
+            c.free_slot(slot) if hasattr(c, "free_slot") else c
+            for c in layers))
+        self._set_tables = jax.jit(lambda layers, table: tuple(
+            c.with_table(table) if isinstance(c, kv_cache.PagedCache) else c
+            for c in layers))
+
+        def _prefill_into(params, toks, mask, layers):
+            c = {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
             return model.prefill(params, c, tokens=toks, pad_mask=mask,
                                  chunk=prefill_chunk)
 
         # jit's own shape-keyed cache compiles once per length bucket
-        self._prefill = jax.jit(_prefill_one)
+        self._prefill = jax.jit(_prefill_into)
         self._sampler = sampling.make_sampler(top_k, top_p, pad_id)
         self._truncates = top_k is not None or top_p is not None
         self._argmax = jax.jit(
@@ -274,6 +342,13 @@ class ServeEngine:
             raise ValueError(
                 f"prompt ({len(tokens)} tokens, bucketed) + max_new_tokens "
                 f"({max_new_tokens}) exceeds engine max_len {self.max_len}")
+        if self.cache_kind == "paged":
+            need = self._pages_needed(
+                _bucket(len(tokens), self.prefill_bucket), max_new_tokens)
+            if need > self._npages:
+                raise ValueError(
+                    f"request needs {need} pages worst-case but the pool "
+                    f"only has {self._npages}; raise pages= or page_size=")
         uid = self._next_uid
         self._next_uid += 1
         self._queue.append(Request(uid, tokens, max_new_tokens, temperature))
@@ -297,21 +372,68 @@ class ServeEngine:
             self.cache["start"] = self.cache["start"].at[slot].set(0)
             self._pos[slot] = 0
             self._temp[slot] = 0.0
+            if self.cache_kind == "paged":   # pages go back to the pool
+                self._free_pages.extend(self._slot_pages.pop(slot, ()))
+                self._slot_reserved.pop(slot, None)
+                self._table[slot] = 0
+                self.cache["layers"] = self._release(
+                    self.cache["layers"], slot)
         else:
             self._next_tok[slot] = tok
         return done
 
+    def _pages_needed(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case pages one request can touch: positions
+        [0, prompt + max_new), capped at the per-slot table length."""
+        return min(-(-(prompt_len + max_new) // self.page_size), self._pps)
+
+    @property
+    def page_stats(self) -> dict | None:
+        """Pool accounting for the paged backend (None otherwise):
+        {total, free (unmapped), reserved (worst-case holds)}."""
+        if self.cache_kind != "paged":
+            return None
+        return {"total": self._npages, "free": len(self._free_pages),
+                "reserved": sum(self._slot_reserved.values())}
+
+    def _alloc_pages(self, slot: int, need: int, reserve: int) -> bool:
+        """Reserve ``reserve`` pages for the request's lifetime and map
+        the first ``need`` (the prompt) onto ``slot``'s block-table
+        prefix; False when the unreserved pool can't cover the
+        reservation (admission waits for an EOS)."""
+        if self._npages - sum(self._slot_reserved.values()) < reserve:
+            return False
+        self._slot_reserved[slot] = reserve
+        pids = [self._free_pages.pop() for _ in range(need)]
+        self._slot_pages[slot] = pids
+        self._table[slot] = 0
+        self._table[slot, :need] = pids
+        self.cache["layers"] = self._set_tables(
+            self.cache["layers"], jnp.asarray(self._table))
+        return True
+
     def _admit(self):
         while self._queue and self._free:
-            req = self._queue.popleft()
-            slot = self._free.pop()
+            req = self._queue[0]
+            slot = self._free[-1]
             n = len(req.tokens)
             sp = _bucket(n, self.prefill_bucket)
+            if self.cache_kind == "paged" and not self._alloc_pages(
+                    slot, -(-sp // self.page_size),
+                    self._pages_needed(sp, req.max_new_tokens)):
+                break          # pool dry: requests wait for a slot's EOS
+            self._queue.popleft()
+            self._free.pop()
             toks = jnp.asarray([[self.pad_id] * (sp - n) + req.tokens],
                                jnp.int32)
             mask, _ = _pad_mask_from_lens([n], 1, sp)
-            logits, c1 = self._prefill(self.params, toks, mask)
-            self.cache["layers"] = self._splice(
+            # prefill straight into a single-slot view of the batch cache
+            # (zeroed rows for dense/ring; the live page pool for paged,
+            # where admission therefore copies no rows at all), then
+            # merge back through the backend's ``admit``
+            view = self._view(self.cache["layers"], slot)
+            logits, c1 = self._prefill(self.params, toks, mask, view)
+            self.cache["layers"] = self._admit_slot(
                 self.cache["layers"], c1["layers"], slot)
             self.cache["pos"] = self.cache["pos"].at[slot].set(sp)
             self.cache["start"] = self.cache["start"].at[slot].set(sp - n)
@@ -337,6 +459,26 @@ class ServeEngine:
         self._admit()
         if not self._active:
             return bool(self._queue)
+        if self.cache_kind == "paged":
+            # slots writing their next token past a page boundary each
+            # grab one page from their reservation (positions are
+            # host-mirrored, so this never syncs on the device); all the
+            # boundary crossings of a tick push as ONE table dispatch
+            dirty = False
+            for slot in self._active:
+                pp = int(self._pos[slot]) // self.page_size
+                if self._table[slot, pp] == 0:
+                    if not self._free_pages:   # unreachable: admission
+                        raise RuntimeError(    # reserves the worst case
+                            "page reservation accounting is broken: pool "
+                            "exhausted mid-decode")
+                    pid = self._free_pages.pop()
+                    self._slot_pages[slot].append(pid)
+                    self._table[slot, pp] = pid
+                    dirty = True
+            if dirty:
+                self.cache["layers"] = self._set_tables(
+                    self.cache["layers"], jnp.asarray(self._table))
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self._next_tok))
         self._pos += 1     # decode_step advances every slot's pos

@@ -70,6 +70,8 @@ def _path_str(path) -> str:
     for p in path:
         if hasattr(p, "key"):
             parts.append(str(p.key))
+        elif hasattr(p, "name"):   # GetAttrKey: cache-backend dataclass fields
+            parts.append(str(p.name))
         elif hasattr(p, "idx"):
             parts.append(str(p.idx))
         else:

@@ -24,8 +24,18 @@ class TestKVQuantPrimitives:
     def test_cache_shapes(self):
         cfg = reduced_config(get_config("qwen2.5-3b"))
         c = attention.init_cache(cfg, 2, 16, jnp.bfloat16, quantized=True)
-        assert c["k"].dtype == jnp.int8
-        assert c["k_s"].shape == c["k"].shape[:-1] + (1,)
+        assert isinstance(c, kv_cache.DenseCache) and c.quantized
+        assert c.k.dtype == jnp.int8
+        assert c.k_s.shape == c.k.shape[:-1] + (1,)
+
+    def test_paged_cache_scales_per_page(self):
+        cfg = reduced_config(get_config("qwen2.5-3b"))
+        c = attention.init_cache(cfg, 2, 16, jnp.bfloat16, quantized=True,
+                                 kind="paged", page_size=8)
+        assert isinstance(c, kv_cache.PagedCache) and c.quantized
+        assert c.k.dtype == jnp.int8
+        assert c.k_s.shape == c.k.shape[:-1] + (1,)   # [P, page, H, 1]
+        assert c.block_table.shape == (2, 2)
 
 
 class TestKVQuantDecode:
