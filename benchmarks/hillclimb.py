@@ -105,6 +105,10 @@ def _transform(name):
 # canonical M=256 engine matmul, and a 1k prefill tile
 TUNE_MATMUL_SHAPES = [(8, 1024, 1024), (256, 1024, 1024), (1024, 4096, 1024)]
 TUNE_ATTENTION_SHAPES = [(256, 256, 64), (1024, 1024, 64)]
+# paged decode kernel: (page_size, head_dim) shape keys; the bench runs
+# at the serving pool scale (max_len below)
+TUNE_PAGED_SHAPES = [(16, 64), (32, 64)]
+TUNE_PAGED_MAX_LEN = 1024
 
 
 def tune_kernels(quick: bool = False) -> dict:
@@ -176,6 +180,59 @@ def tune_kernels(quick: bool = False) -> dict:
         best = tuning.autotune("flash_attention", (sq, skv, d), bench_flash,
                                cands, iters=iters, warmup=warmup)
         results[f"flash_attention:{sq}x{skv}x{d}"] = best
+
+    # paged decode attention: on TPU the kernel's within-page kv tile
+    # (block_kv) is what matters; on CPU the serving path is the jnp
+    # oracle, so the sweep measures its pages-per-block streaming
+    # granularity (block_pages) instead — both knobs live in the one
+    # "paged_attention" table entry
+    import functools
+
+    from repro.kernels.paged_attention.paged_attention import (
+        paged_attention_kernel)
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+
+    pg_shapes = [(16, 64)] if quick else TUNE_PAGED_SHAPES
+    max_len = 128 if quick else TUNE_PAGED_MAX_LEN
+    for page, d in pg_shapes:
+        b, hkv, hq = 4, 2, 8
+        pps = -(-max_len // page)
+        pool_shape = (b * pps + 1, page, hkv, d)
+        kp = jnp.asarray(rng.normal(size=pool_shape).astype(np.float32))
+        vp = jnp.asarray(rng.normal(size=pool_shape).astype(np.float32))
+        table = jnp.asarray(
+            1 + np.arange(b * pps, dtype=np.int32).reshape(b, pps))
+        q = jnp.asarray(rng.normal(size=(b, hq, 1, d)).astype(np.float32))
+        pos = jnp.full((b,), max_len - 1, jnp.int32)
+        start = jnp.zeros((b,), jnp.int32)
+        # sweep only the knob this host's backend responds to — the
+        # kernel ignores block_pages and the oracle ignores block_kv
+        cands = tuning.paged_attention_candidates(
+            page, knob="oracle" if interpret else "kernel")
+        if quick:
+            cands = cands[:4]
+
+        @functools.lru_cache(maxsize=None)
+        def jitted_ref(block_pages):
+            # force the blocks path: block_pages is ITS knob (the auto
+            # dispatch may pick pool-wide scores, which ignore it)
+            return jax.jit(functools.partial(
+                paged_attention_ref, page_size=page,
+                block_pages=block_pages, score_mode="blocks"))
+
+        def bench_paged(cfg):
+            if interpret:
+                out = jitted_ref(int(cfg["block_pages"]))(
+                    q, kp, vp, table, pos, start)
+            else:
+                out = paged_attention_kernel(
+                    q, kp, vp, table, pos, start, page_size=page,
+                    block_kv=cfg["block_kv"])
+            jax.block_until_ready(out)
+
+        best = tuning.autotune("paged_attention", (page, d), bench_paged,
+                               cands, iters=iters, warmup=warmup)
+        results[f"paged_attention:{page}x{d}"] = best
 
     return results
 

@@ -21,10 +21,12 @@ prefill vs the seed's token-by-token prefill, steady-state decode, and
 decode+on-device-sample engine ticks); under ``"flash_prefill"``, the
 masked flash-attention prefill vs the deleted dense-einsum path at
 S0=256; under ``"sampler"``, the batched single-dispatch sampler vs the
-per-slot host sampling loop it replaced; and under ``"paged"``, the
+per-slot host sampling loop it replaced; under ``"paged"``, the
 paged-vs-dense KV-cache backends (steady-state decode and slot
 admission — pool adoption + one block-table row vs whole-row splice —
-at B=8).
+at B=8); and under ``"paged_attn_kernel"``, the in-place paged
+decode-attention kernel/oracle vs the gather-then-flash read it
+replaced, at max_len 128 and 1024.
 """
 
 from __future__ import annotations
@@ -220,9 +222,11 @@ def paged_cache_benches(slots=8, s0=64, decode_steps=8, page_size=16):
     """Paged vs dense KV-cache serving paths at B=8.
 
     ``paged_decode``: the steady-state batched decode step through
-    ``PagedCache`` (page-pool gather + block tables) against the same
-    step through ``DenseCache`` — the gather indirection is the price of
-    admission-by-index.  ``paged_admission``: admitting one prefilled
+    ``PagedCache`` — since PR 5 the in-place paged-attention read
+    (pool + block table straight into the kernel/oracle; the gather
+    indirection that used to price admission-by-index is gone) —
+    against the same step through ``DenseCache``.
+    ``paged_admission``: admitting one prefilled
     slot into the [slots, max_len] batch cache — the pre-paged engine
     spliced whole [max_len] rows into every layer's cache; the paged
     engine adopts the shared pool (the admission prefill already wrote
@@ -284,7 +288,7 @@ def paged_cache_benches(slots=8, s0=64, decode_steps=8, page_size=16):
         (f"dense_decode_b{slots}", t_dense,
          "steady-state decode step, DenseCache"),
         (f"paged_decode_b{slots}", t_paged,
-         "steady-state decode step, PagedCache (pool gather)"),
+         "steady-state decode step, PagedCache (in-place kernel read)"),
         (f"row_splice_admission_b{slots}", t_splice,
          "slot admission: whole [max_len]-row splice (pre-paged engine)"),
         (f"paged_admission_b{slots}", t_admit,
@@ -300,6 +304,96 @@ def paged_cache_benches(slots=8, s0=64, decode_steps=8, page_size=16):
         "us_admission_paged": round(t_admit, 2),
         "admission_speedup_paged_vs_row_splice": round(t_splice / t_admit, 3),
     }
+    return rows, record
+
+
+def paged_attn_benches(batch=4, heads=8, kv_heads=2, head_dim=64,
+                       page_size=16, max_lens=(128, 1024), iters=40):
+    """Gather-then-flash vs in-place paged decode attention, op level.
+
+    The gather arm is the PR4 decode read, built from the REAL backend
+    pieces: ``PagedCache.gather_view`` materializes the position-ordered
+    [B, max_len] K/V copy, then the shared ``masked_attention`` core
+    runs over it (so the baseline tracks the serving-path code, not a
+    hand-rolled twin of it).  The in-place arm is
+    ``paged_ops.paged_attention`` — the kernel/oracle that consumes the
+    page pool + block table directly (the serving decode path since this
+    PR).  Both jitted, identical pools/tables, full-context ``pos``.
+    max_len 128 is where PR4 measured decode "~even"; 1024 is where the
+    O(B * max_len) gather copy shows up.  The record lands in
+    BENCH_ent_matmul.json under "paged_attn_kernel".
+    """
+    from repro.kernels.flash_attention import ops as attn_ops
+    from repro.kernels.paged_attention import ops as paged_ops
+    from repro.models.kv_cache import PagedCache
+
+    rng = np.random.default_rng(0)
+    b, hq, hkv, d = batch, heads, kv_heads, head_dim
+    rows, record = [], {
+        "batch": b, "heads": hq, "kv_heads": hkv, "head_dim": d,
+        "page_size": page_size, "backend": jax.default_backend(),
+    }
+    for max_len in max_lens:
+        pps = -(-max_len // page_size)
+        pool_shape = (b * pps + 1, page_size, hkv, d)
+        kp = jnp.asarray(rng.normal(size=pool_shape).astype(np.float32))
+        vp = jnp.asarray(rng.normal(size=pool_shape).astype(np.float32))
+        table = jnp.asarray(
+            1 + np.arange(b * pps, dtype=np.int32).reshape(b, pps))
+        q = jnp.asarray(rng.normal(size=(b, hq, 1, d)).astype(np.float32))
+        pos = jnp.full((b,), max_len - 1, jnp.int32)
+        start = jnp.zeros((b,), jnp.int32)
+
+        @jax.jit
+        def gather_decode(q, kp, vp, table):
+            pc = PagedCache(k=kp, v=vp, block_table=table,
+                            page_size=page_size)
+            kop, vop, _, _, valid = pc.gather_view(pos, start)
+            return attn_ops.masked_attention(
+                q, kop.transpose(0, 2, 1, 3), vop.transpose(0, 2, 1, 3),
+                valid=valid[:, None, :])
+
+        inplace_decode = jax.jit(lambda q, kp, vp, table: (
+            paged_ops.paged_attention(q, kp, vp, table, pos, start,
+                                      page_size=page_size)))
+
+        # paired-slice alternation, median of 5 passes: within a pass
+        # the arms alternate in 5-call slices so machine-load drift
+        # (which lasts whole timing windows on a shared box) lands on
+        # both arms equally; the per-pass ratio is then a paired
+        # statistic, and the median over passes rejects the passes a
+        # load burst still skewed
+        jax.block_until_ready(gather_decode(q, kp, vp, table))
+        jax.block_until_ready(inplace_decode(q, kp, vp, table))
+        passes = []
+        for _ in range(5):
+            t_g = t_i = 0.0
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                for _ in range(5):
+                    out = gather_decode(q, kp, vp, table)
+                jax.block_until_ready(out)
+                t1 = time.perf_counter()
+                for _ in range(5):
+                    out = inplace_decode(q, kp, vp, table)
+                jax.block_until_ready(out)
+                t_g += t1 - t0
+                t_i += time.perf_counter() - t1
+            passes.append((t_g / t_i, t_g / (5 * iters) * 1e6,
+                           t_i / (5 * iters) * 1e6))
+        passes.sort()
+        _, t_g, t_i = passes[len(passes) // 2]   # median-ratio pass
+        rows += [
+            (f"paged_decode_gather_w{max_len}", t_g,
+             "gather-then-flash decode read (PR4 path)"),
+            (f"paged_decode_inplace_w{max_len}", t_i,
+             "in-place paged-attention kernel/oracle"),
+        ]
+        record[f"max_len_{max_len}"] = {
+            "us_gather_then_flash": round(t_g, 2),
+            "us_inplace_kernel": round(t_i, 2),
+            "speedup_inplace_vs_gather": round(t_g / t_i, 3),
+        }
     return rows, record
 
 
@@ -452,6 +546,11 @@ def kernel_benches(quick: bool = False):
         **({"decode_steps": 4, "s0": 32} if quick else {}))
     rows += grows
     record["paged"] = grecord
+    # gather-vs-in-place paged decode read: both max_len points stay in
+    # --quick (the 1024 row is the acceptance number), only iters shrink
+    arows, arecord = paged_attn_benches(iters=10 if quick else 40)
+    rows += arows
+    record["paged_attn_kernel"] = arecord
 
     with open("BENCH_ent_matmul.json", "w") as f:
         json.dump(record, f, indent=1)

@@ -32,6 +32,7 @@ __all__ = [
     "autotune",
     "matmul_candidates",
     "attention_candidates",
+    "paged_attention_candidates",
     "record",
     "clear",
     "cache_path",
@@ -39,6 +40,7 @@ __all__ = [
 
 MATMUL_FAMILIES = ("int8_matmul", "ent_matmul")
 ATTENTION_FAMILIES = ("flash_attention",)
+PAGED_FAMILIES = ("paged_attention",)
 
 # (family, key) -> config dict.  Populated by autotune()/record() and by
 # the JSON cache; consulted before the heuristics.
@@ -119,6 +121,16 @@ def _heuristic(family: str, shape) -> dict:
     if family in ATTENTION_FAMILIES:
         sq, skv, d = (int(x) for x in shape)
         return {"block_q": _fit(sq, 128), "block_kv": _fit(skv, 128)}
+    if family in PAGED_FAMILIES:
+        # (page_size, head_dim): block_kv tiles WITHIN one page (the
+        # kernel streams page by page through the block table, so the kv
+        # tile can never span pages); block_pages is the jnp oracle's
+        # K-streaming granularity — 64 pages per block, i.e. one
+        # assembled read at the 1024-token serving width (on CPU an
+        # indexed page read cannot fuse into the GEMM, so coarse blocks
+        # win; the sweep refines per host)
+        page, d = (int(x) for x in shape)
+        return {"block_kv": _fit(page, 128), "block_pages": 64}
     raise KeyError(f"unknown kernel family: {family}")
 
 
@@ -128,6 +140,8 @@ def _valid(family: str, shape, cfg: dict) -> bool:
     the bucket may not divide this launch's dims.)"""
     if family in MATMUL_FAMILIES:
         dims = {"block_m": shape[0], "block_k": shape[1], "block_n": shape[2]}
+    elif family in PAGED_FAMILIES:
+        dims = {"block_kv": shape[0]}   # must divide the page
     else:
         dims = {"block_q": shape[0], "block_kv": shape[1]}
     return all(int(dims[k]) % min(int(cfg[k]), int(dims[k])) == 0
@@ -183,6 +197,34 @@ def attention_candidates(sq: int, skv: int) -> list[dict]:
             if sq % min(bq, sq) or skv % min(bkv, skv):
                 continue
             out.append({"block_q": min(bq, sq), "block_kv": min(bkv, skv)})
+    uniq = {tuple(sorted(c.items())): c for c in out}
+    return list(uniq.values())
+
+
+def paged_attention_candidates(page_size: int,
+                               knob: str = "both") -> list[dict]:
+    """Sweep for the paged decode attention family.
+
+    The two knobs belong to different backends — ``block_kv`` (within-
+    page kv tile, must divide the page) to the Pallas kernel,
+    ``block_pages`` (pages per score block) to the jnp oracle — so a
+    bench that exercises one backend should sweep only its own knob
+    (``knob="kernel"`` / ``"oracle"``): the cross product would time
+    duplicates and persist the other knob from noise.  The un-swept
+    knob rides along at its heuristic default.
+    """
+    base = _heuristic("paged_attention", (page_size, 0))
+    bkvs = [min(b, page_size) for b in (8, 16, 32, 64, 128)
+            if page_size % min(b, page_size) == 0]
+    bps = (8, 16, 32, 64, 128)
+    if knob == "kernel":
+        out = [{"block_kv": b, "block_pages": base["block_pages"]}
+               for b in bkvs]
+    elif knob == "oracle":
+        out = [{"block_kv": base["block_kv"], "block_pages": p}
+               for p in bps]
+    else:
+        out = [{"block_kv": b, "block_pages": p} for b in bkvs for p in bps]
     uniq = {tuple(sorted(c.items())): c for c in out}
     return list(uniq.values())
 

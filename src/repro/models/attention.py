@@ -14,11 +14,15 @@ attention itself through ``attn_ops.masked_attention`` — a tiled
 online-softmax core (Pallas with scalar-prefetch ``start`` on TPU, a
 blocked jnp oracle on CPU).  The layer no longer knows which backend it
 is talking to: the ring wrap/validity logic that used to live inline
-here is owned by ``RingCache``, and ``PagedCache`` gathers its pages
-back into the same position-ordered view, which is what makes paged
-decode bit-identical to dense.  ``prefill_step`` takes a ``pos0`` chunk
-offset so prompts longer than the sliding-window ring are prefilled in
-chunks that write the cache through (see ``transformer.Model.prefill``).
+here is owned by ``RingCache``, and ``PagedCache`` decode reads are IN
+PLACE — ``token_view`` returns the page pool + block table (a
+``kv_cache.PagedView``) and ``decode_step`` routes it through
+``paged_ops.paged_attention``, which streams pages in table order
+(= position order, which is what keeps paged decode bit-identical to
+dense) instead of materializing the gathered [B, max_len] copy.
+``prefill_step`` takes a ``pos0`` chunk offset so prompts longer than
+the sliding-window ring are prefilled in chunks that write the cache
+through (see ``transformer.Model.prefill``).
 """
 
 from __future__ import annotations
@@ -28,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.flash_attention import ops as attn_ops
+from repro.kernels.paged_attention import ops as paged_ops
 from repro.models import kv_cache
 from repro.models import layers as L
 
@@ -148,10 +153,12 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
     its own depth).  ``cache`` is any :class:`kv_cache.KVCache` backend.
 
     Returns (y [B, 1, D], updated cache).  Keys are rotated at write
-    time; the backend places the row (``write_token``) and hands back the
-    contraction operands plus a per-slot validity mask (``token_view`` —
-    the ring backend reconstructs each slot's absolute position, the
-    paged backend gathers its pages into position order).  ``start``
+    time; the backend places the row (``write_token``) and hands back its
+    read protocol (``token_view``): the row backends return contraction
+    operands plus a per-slot validity mask (the ring backend
+    reconstructs each slot's absolute position), the paged backend
+    returns the page pool + block table for the in-place paged-attention
+    kernel.  ``start``
     ([B] int32, optional) is the number of left-pad slots per sequence
     for ragged batches: RoPE positions become ``pos - start`` and slots
     below ``start`` are masked out of the attention forever.  int8-KV
@@ -169,7 +176,19 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
     q, k, v = _project(cfg, p, x, positions)          # q: [B,1,H,hd]
 
     new = cache.write_token(k, v, pos, per_seq)
-    kop, vop, ks, vs, valid = new.token_view(pos_b, start_b)
+    view = new.token_view(pos_b, start_b)
+
+    if isinstance(view, kv_cache.PagedView):
+        # in-place paged read: the kernel scalar-prefetches the block
+        # table and streams K/V pages (and their per-page int8 scales)
+        # straight from the pool — the [B, max_len] gathered view, and
+        # the full-view int8->compute cast the row backends pay, are
+        # never materialized
+        out = paged_ops.paged_attention(
+            q.transpose(0, 2, 1, 3), view.k, view.v, view.block_table,
+            pos_b, start_b, page_size=view.page_size,
+            k_scales=view.k_s, v_scales=view.v_s)
+        return _finish(cfg, p, out), new
 
     # attention against the whole cache view through the shared masked
     # core (the mask is position-scattered for rings, so it rides as an
@@ -177,6 +196,7 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
     # cache stays in its storage dtype — f32 happens only in the
     # contraction accumulator, never as a materialized f32 copy of the
     # multi-GB cache.
+    kop, vop, ks, vs, valid = view
     dt = L.cdtype(cfg)
     if kop.dtype == jnp.int8:
         kop, vop = kop.astype(dt), vop.astype(dt)

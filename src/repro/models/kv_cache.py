@@ -28,12 +28,17 @@ Backends:
   (slot = pos % W), absorbing the wrap placement and the scattered-slot
   validity mask that used to live in ``attention.py``.
 * :class:`PagedCache` — fixed-size pages in a shared pool plus per-slot
-  int32 block tables (vLLM-style).  Reads gather pages back into
-  position order and feed the same ``ops.masked_attention`` core, so
-  decode and chunked prefill are bit-identical to :class:`DenseCache`
-  (page 0 is a reserved null page; unallocated table entries point at it
-  and are masked out).  int8-KV scales are stored per page alongside the
-  values.  Admission allocates pages instead of copying rows, and a
+  int32 block tables (vLLM-style).  The DECODE read is in place:
+  ``token_view`` returns a :class:`PagedView` (pool + table + per-page
+  scales) that ``attention.decode_step`` hands to the paged-attention
+  kernel (``repro.kernels.paged_attention``), which streams pages in
+  table order — the gathered [B, max_len] KV copy that used to be
+  materialized per decode step is gone, and decode stays bit-identical
+  to :class:`DenseCache` (page 0 is a reserved null page; unallocated
+  table entries point at it and are masked out).  Chunked prefill keeps
+  the pages-covering-prefix gather (``context``), whose cost is
+  O(prompt), not O(pool).  int8-KV scales are stored per page alongside
+  the values.  Admission allocates pages instead of copying rows, and a
   freed slot returns its pages to the pool — the data-reuse-through-
   indirection move EN-T makes at the MAC level, applied to cache slots.
 
@@ -48,12 +53,28 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass, replace
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 DEFAULT_PAGE_SIZE = 16
+
+
+class PagedView(NamedTuple):
+    """In-place decode read: the page pools AS STORED plus the block
+    table — what the paged-attention kernel consumes.  Returned by
+    ``PagedCache.token_view`` in place of the row backends' gathered
+    ``(k, v, k_s, v_s, valid)`` operands; masking (pos / start / null
+    page) happens inside the kernel from the same [B] vectors."""
+
+    k: jax.Array                  # [P, page, H, hd] pool
+    v: jax.Array
+    k_s: jax.Array | None         # [P, page, H, 1] per-page scales
+    v_s: jax.Array | None
+    block_table: jax.Array        # [B, pages_per_slot] int32
+    page_size: int
 
 
 def _register(meta=()):
@@ -148,10 +169,15 @@ class KVCache(CacheSlots):
 
     Layout contract (unstacked, as seen inside one layer's serving
     step): the *logical* kv view is ``width`` rows per sequence in
-    position-or-slot order; ``token_view``/``context`` return operands
-    in storage layout ``[B, W, H, *]`` plus (for decode) a ``[B, W]``
-    validity mask.  ``window`` is the attention sliding window the
-    backend implies (ring only) — dense/paged carry no window mask.
+    position-or-slot order.  ``token_view`` returns the decode read in
+    one of two protocols — row backends (dense/ring) hand back
+    ``(k, v, k_s, v_s, valid)`` operands in storage layout
+    ``[B, W, H, *]`` plus a ``[B, W]`` validity mask; the paged backend
+    hands back a :class:`PagedView` (pool + block table, consumed
+    in place by the paged-attention kernel).  ``context`` returns
+    ``[B, ctx, H, *]`` operands for chunked prefill on every backend.
+    ``window`` is the attention sliding window the backend implies
+    (ring only) — dense/paged carry no window mask.
     """
 
     window: int | None = None
@@ -282,10 +308,13 @@ class PagedCache(KVCache):
     ``k``/``v``: ``[P, page, H, hd]`` page pools (page 0 reserved as the
     null page); ``k_s``/``v_s``: per-page scale pools for int8 KV;
     ``block_table``: ``[B, pages_per_slot]`` int32 page ids (0 =
-    unmapped).  Reads gather the table back into position order, so the
-    logical view is identical to :class:`DenseCache` and the serving
-    math is bit-identical; writes scatter into the owning page.  Slot
-    admission and release move page *indices*, never rows.
+    unmapped).  Decode reads are IN PLACE: ``token_view`` hands the pool
+    + table to the paged-attention kernel as a :class:`PagedView`
+    (table order is position order, so the logical view — and the
+    serving math — stays bit-identical to :class:`DenseCache` without
+    ever materializing it); chunked-prefill ``context`` still gathers
+    the pages covering the prefix.  Writes scatter into the owning
+    page.  Slot admission and release move page *indices*, never rows.
     """
 
     k: jax.Array
@@ -314,6 +343,19 @@ class PagedCache(KVCache):
         return new
 
     def token_view(self, pos_b, start_b):
+        """In-place decode read: pool + table, NO gathered copy.  The
+        kernel masks unmapped (null-page) columns and positions outside
+        [start, pos] from the same vectors the row backends bake into
+        ``valid``."""
+        del pos_b, start_b   # masked in-kernel
+        return PagedView(self.k, self.v, self.k_s, self.v_s,
+                         self.block_table, self.page_size)
+
+    def gather_view(self, pos_b, start_b):
+        """The pre-kernel read: pages gathered into a position-ordered
+        [B, W] copy + explicit validity mask (the row backends' operand
+        contract).  Kept as the parity/benchmark baseline the in-place
+        kernel is measured against."""
         b, w = pos_b.shape[0], self.width
         idx = jnp.arange(w)[None, :]
         slot_pos = jnp.broadcast_to(idx, (b, w))

@@ -17,9 +17,16 @@ Three layers, bottom-up:
   queue.  With the default PAGED backend, admission allocates
   fixed-size pages from a shared pool and prefills straight through a
   block-table view — page indices move, cache rows never do — and a
-  finished request's pages return to the pool; sliding-window models
-  serve through the RING backend (absolute per-slot positions over a
-  window-sized ring, prompts longer than the window included).
+  finished request's pages return to the pool; the decode tick then
+  reads those pages IN PLACE: ``decode_step`` hands the pool + block
+  table to the paged-attention kernel (``repro.kernels.paged_attention``
+  — scalar-prefetched table, per-page int8 scales dequantized
+  in-kernel, null pages compute-skipped), so a tick never materializes
+  the gathered [slots, max_len] KV view (the admission prefill's
+  pages-covering-prefix gather only runs for chunked prompts).
+  Sliding-window models serve through the RING backend (absolute
+  per-slot positions over a window-sized ring, prompts longer than the
+  window included).
   Sampling runs ON DEVICE (``repro.runtime.sampling``): each decode
   tick is one batched decode dispatch plus one batched sample dispatch,
   and only [B] int32 tokens cross back to the host — never the [B, V]
@@ -232,12 +239,15 @@ class ServeEngine:
       (ceil((prompt + max_new_tokens) / page) pages), maps the prompt's
       pages from a host free list, and prefills straight through the
       pool, so admitting a request moves page INDICES, never [max_len]
-      cache rows; decode maps one reserved page at a time as a slot
-      crosses a page boundary, and EOS returns the slot's pages to the
-      pool.  ``pages`` caps the pool (default: full provisioning,
-      slots * ceil(max_len / page_size)) — an undersized pool
-      admission-stalls instead of failing, and in-flight requests can
-      never run out of pages.
+      cache rows; the decode tick reads the pages in place through the
+      paged-attention kernel (no gathered KV view — a freshly admitted
+      slot's unmapped tail and a freed slot's all-null table row are
+      masked/compute-skipped in-kernel), maps one reserved page at a
+      time as a slot crosses a page boundary, and EOS returns the
+      slot's pages to the pool.  ``pages`` caps the pool (default: full
+      provisioning, slots * ceil(max_len / page_size)) — an undersized
+      pool admission-stalls instead of failing, and in-flight requests
+      can never run out of pages.
     * "ring" — sliding-window decode: slots still track ABSOLUTE
       positions while rows live in a ``window``-slot ring, so prompts
       longer than the window are servable end to end (admission chunks

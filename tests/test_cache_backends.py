@@ -101,7 +101,10 @@ class TestRingPlacementProperty:
 
 def _fill_pair(key, b, w, h, hd, page, quantized, chunks):
     """Drive a DenseCache and a PagedCache through the same chunked
-    prompt writes + one token write; returns both token_view results."""
+    prompt writes + one token write; returns the dense token_view and
+    the paged gather_view (the position-ordered baseline the in-place
+    kernel read replaced — still the oracle the pool layout is pinned
+    against)."""
     dtype = jnp.bfloat16
     dense = kv_cache.DenseCache(k=jnp.zeros((b, w, h, hd), dtype),
                                 v=jnp.zeros((b, w, h, hd), dtype))
@@ -126,7 +129,7 @@ def _fill_pair(key, b, w, h, hd, page, quantized, chunks):
     dense = dense.write_token(kr, vr, pos, per_seq=True)
     paged = paged.write_token(kr, vr, pos, per_seq=True)
     start = jnp.zeros((b,), jnp.int32)
-    return dense.token_view(pos, start), paged.token_view(pos, start), pos0
+    return dense.token_view(pos, start), paged.gather_view(pos, start), pos0
 
 
 class TestPagedGatherOracle:

@@ -1,0 +1,256 @@
+"""In-place paged decode attention: kernel + oracle vs the gather path.
+
+Pins this PR's acceptance contract:
+
+* the jnp oracle (the CPU serving path) is BIT-identical to the
+  gather-then-``masked_attention`` read it replaced — for bf16 and
+  int8-KV with per-page scales, any ``block_pages`` streaming
+  granularity, partial last pages, page-0 null table entries, and
+  ragged per-slot lengths (hypothesis sweep over (B, page_size, ctx));
+* the Pallas kernel (interpret mode) matches the oracle at float
+  tolerance over the same grid, including within-page ``block_kv``
+  tiles, and emits exact zeros for fully-masked (all-null) slots;
+* the model decode path no longer touches ``PagedCache._gather``:
+  a ServeEngine decode tick and ``Model.decode_step`` run end to end
+  with the gather forcibly disabled, and stay bit-identical to the
+  dense backend.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config, reduced_config
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.kernels.paged_attention import ops as paged_ops
+from repro.kernels.paged_attention.paged_attention import (
+    paged_attention_kernel)
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.models import kv_cache
+from repro.models.transformer import build_model
+from repro.runtime.serve_loop import ServeEngine, generate
+
+RNG = np.random.default_rng(7)
+
+
+def _filled_cache(b, max_len, lens, h=2, hd=16, page=4, quantized=False,
+                  dtype=jnp.float32):
+    """A PagedCache written token by token to ragged depths ``lens``
+    (slot i stops writing at lens[i]); returns (cache, pos [B])."""
+    pc = kv_cache.paged_init(b, max_len, h, hd, dtype, page_size=page,
+                             quantized=quantized)
+    for t in range(max(lens)):
+        k = jnp.asarray(RNG.normal(size=(b, 1, h, hd)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(b, 1, h, hd)).astype(np.float32))
+        slot = jnp.asarray([min(t, n - 1) for n in lens], jnp.int32)
+        pc = pc.write_token(k, v, slot, per_seq=True)
+    return pc, jnp.asarray([n - 1 for n in lens], jnp.int32)
+
+
+def _gather_read(q, pc, pos, start):
+    """The PR4 decode read: gather_view + masked_attention (the oracle
+    the in-place op must reproduce bit for bit)."""
+    kop, vop, ks, vs, valid = pc.gather_view(pos, start)
+    kw = {}
+    if ks is not None:
+        sc = lambda s: s[..., 0].transpose(0, 2, 1).astype(jnp.float32)
+        kw = dict(k_scale=sc(ks), v_scale=sc(vs))
+    dt = q.dtype if kop.dtype == jnp.int8 else kop.dtype
+    return attn_ops.masked_attention(
+        q, kop.astype(dt).transpose(0, 2, 1, 3),
+        vop.astype(dt).transpose(0, 2, 1, 3), valid=valid[:, None, :], **kw)
+
+
+def _scales(pc):
+    return (dict(k_scales=pc.k_s, v_scales=pc.v_s) if pc.quantized else {})
+
+
+class TestOracleBitIdentity:
+    """The jnp oracle == gather-then-masked_attention, bit for bit."""
+
+    @pytest.mark.parametrize("quantized", [False, True])
+    @pytest.mark.parametrize("page,lens", [
+        (4, [13, 7]),        # partial last page + ragged depths
+        (8, [16, 16]),       # exact page boundary
+        (2, [5, 11]),        # tiny pages
+    ])
+    def test_matches_gather_read(self, page, lens, quantized):
+        b, h, hd, max_len = 2, 2, 16, 16
+        pc, pos = _filled_cache(b, max_len, lens, h, hd, page, quantized)
+        start = jnp.asarray([0, 2], jnp.int32)
+        q = jnp.asarray(RNG.normal(size=(b, 4, 1, hd)).astype(np.float32))
+        want = _gather_read(q, pc, pos, start)
+        for bp in (1, 2, None):   # any streaming granularity is bit-exact
+            got = paged_attention_ref(
+                q, pc.k, pc.v, pc.block_table, pos, start, page_size=page,
+                block_pages=bp, **_scales(pc))
+            np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+        # pool-wide scores (one GEMM vs the whole pool + column select)
+        # are the same dots, hence also bit-exact
+        got = paged_attention_ref(
+            q, pc.k, pc.v, pc.block_table, pos, start, page_size=page,
+            score_mode="pool", **_scales(pc))
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+    def test_bf16_pool_bit_identical(self):
+        pc, pos = _filled_cache(2, 16, [9, 12], page=4, dtype=jnp.bfloat16)
+        start = jnp.zeros((2,), jnp.int32)
+        q = jnp.asarray(RNG.normal(size=(2, 4, 1, 16)).astype(np.float32))
+        want = _gather_read(q, pc, pos, start)
+        got = paged_attention_ref(q, pc.k, pc.v, pc.block_table, pos, start,
+                                  page_size=4, block_pages=2)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+    def test_null_pages_beyond_pos_change_nothing(self):
+        """Unmapping the tail pages past a slot's depth (what the engine
+        allocator leaves unmapped) must not change the output."""
+        pc, pos = _filled_cache(2, 24, [13, 7], page=4)
+        start = jnp.zeros((2,), jnp.int32)
+        q = jnp.asarray(RNG.normal(size=(2, 4, 1, 16)).astype(np.float32))
+        base = paged_attention_ref(q, pc.k, pc.v, pc.block_table, pos, start,
+                                   page_size=4)
+        bt = np.asarray(pc.block_table).copy()
+        bt[0, 4:] = 0   # slot 0 holds positions 0..12 -> pages 0..3
+        bt[1, 2:] = 0   # slot 1 holds positions 0..6  -> pages 0..1
+        got = paged_attention_ref(q, pc.k, pc.v, jnp.asarray(bt), pos, start,
+                                  page_size=4)
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.integers(1, 3), page=st.sampled_from([2, 3, 4, 8]),
+           ctx=st.integers(1, 20), quantized=st.booleans())
+    def test_property_sweep(self, b, page, ctx, quantized):
+        """(B, page_size, ctx) sweep: ragged depths derived from ctx,
+        partial pages included; oracle == gather read bit for bit."""
+        max_len = 24
+        lens = [max(1, ctx - 3 * i) for i in range(b)]
+        pc, pos = _filled_cache(b, max_len, lens, h=1, hd=8, page=page,
+                                quantized=quantized)
+        start = jnp.zeros((b,), jnp.int32)
+        q = jnp.asarray(RNG.normal(size=(b, 2, 1, 8)).astype(np.float32))
+        want = _gather_read(q, pc, pos, start)
+        got = paged_attention_ref(q, pc.k, pc.v, pc.block_table, pos, start,
+                                  page_size=page, block_pages=2,
+                                  **_scales(pc))
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+class TestKernelParity:
+    """Pallas kernel (interpret) vs the oracle, float tolerance."""
+
+    @pytest.mark.parametrize("quantized", [False, True])
+    @pytest.mark.parametrize("page,block_kv", [(4, None), (8, 4), (8, 8)])
+    def test_matches_oracle(self, page, block_kv, quantized):
+        b, h, hd, max_len = 2, 2, 16, 16
+        pc, pos = _filled_cache(b, max_len, [13, 7], h, hd, page, quantized)
+        start = jnp.asarray([0, 2], jnp.int32)
+        q = jnp.asarray(RNG.normal(size=(b, 4, 1, hd)).astype(np.float32))
+        want = paged_attention_ref(q, pc.k, pc.v, pc.block_table, pos, start,
+                                   page_size=page, **_scales(pc))
+        got = paged_attention_kernel(
+            q, pc.k, pc.v, pc.block_table, pos, start, pc.k_s, pc.v_s,
+            page_size=page, block_kv=block_kv, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-6, rtol=1e-5)
+
+    def test_fully_masked_slot_emits_zeros(self):
+        """An idle serving slot (all-null table row) must emit exact
+        zeros — the compute-skipped blocks leave the accumulator at 0."""
+        pc, pos = _filled_cache(2, 16, [9, 5], page=4)
+        bt = np.asarray(pc.block_table).copy()
+        bt[1, :] = 0
+        q = jnp.asarray(RNG.normal(size=(2, 4, 1, 16)).astype(np.float32))
+        start = jnp.zeros((2,), jnp.int32)
+        for impl in ("ref", "interpret"):
+            got = paged_ops.paged_attention(
+                q, pc.k, pc.v, jnp.asarray(bt), pos, start, page_size=4,
+                use_kernel=impl)
+            assert np.all(np.asarray(got)[1] == 0), impl
+            assert np.any(np.asarray(got)[0] != 0), impl
+
+    def test_ops_dispatch_interpret_end_to_end(self):
+        """The ops entry point (the decode_step call) in interpret mode:
+        kernel result == the CPU ref dispatch at tolerance."""
+        pc, pos = _filled_cache(2, 16, [10, 16], page=8, quantized=True)
+        q = jnp.asarray(RNG.normal(size=(2, 4, 1, 16)).astype(np.float32))
+        start = jnp.zeros((2,), jnp.int32)
+        a = paged_ops.paged_attention(q, pc.k, pc.v, pc.block_table, pos,
+                                      start, page_size=8, use_kernel="ref",
+                                      **_scales(pc))
+        k = paged_ops.paged_attention(q, pc.k, pc.v, pc.block_table, pos,
+                                      start, page_size=8,
+                                      use_kernel="interpret", **_scales(pc))
+        np.testing.assert_allclose(np.asarray(k), np.asarray(a), atol=2e-6,
+                                   rtol=1e-5)
+
+
+class TestDecodePathInPlace:
+    """The engine decode path runs WITHOUT the page gather."""
+
+    @pytest.fixture(scope="class")
+    def tiny(self):
+        cfg = reduced_config(get_config("qwen2.5-3b"))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        return cfg, model, params
+
+    def test_decode_step_never_gathers(self, tiny, monkeypatch):
+        """decode_step through PagedCache must not call _gather (the
+        read is pool + table); the result stays bit-identical to the
+        dense backend."""
+        cfg, model, params = tiny
+        toks = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 1,
+                                  cfg.vocab_size)
+        ld, cd = model.prefill(params, model.init_cache(2, 16), tokens=toks)
+        lp, cp = model.prefill(
+            params, model.init_cache(2, 16, kind="paged", page_size=4),
+            tokens=toks)
+
+        def boom(self, c):
+            raise AssertionError("decode path gathered the paged view")
+
+        monkeypatch.setattr(kv_cache.PagedCache, "_gather", boom)
+        for t in range(3):
+            ld, cd = model.decode_step(params, cd, tokens=toks[:, t])
+            lp, cp = model.decode_step(params, cp, tokens=toks[:, t])
+            np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp))
+
+    def test_engine_ticks_without_gather(self, tiny, monkeypatch):
+        """A full ServeEngine run on the paged default — admission
+        prefill, decode ticks, EOS release — with ``_gather`` disabled
+        (unchunked admission attends over fresh K/V only, so nothing on
+        the serving path needs the gathered view); output matches
+        generate() bit for bit."""
+        cfg, model, params = tiny
+
+        def boom(self, c):
+            raise AssertionError("engine serving path gathered pages")
+
+        monkeypatch.setattr(kv_cache.PagedCache, "_gather", boom)
+        eng = ServeEngine(model, params, slots=2, max_len=32, page_size=4)
+        assert eng.cache_kind == "paged"
+        prompt = [3, 1, 4, 1, 5]
+        uid = eng.submit(prompt, max_new_tokens=6)
+        res = eng.run()
+        ref = generate(model, params, jnp.asarray([prompt], jnp.int32),
+                       steps=6, cache_kind="dense")
+        assert res[uid] == np.asarray(ref)[0].tolist()
+
+    def test_kv_quant_decode_bit_identical(self, tiny):
+        """int8-KV paged decode through the in-place op == dense int8
+        decode, bit for bit (per-page scales folded in-op)."""
+        cfg, _, _ = tiny
+        model = build_model(cfg, kv_quant=True)
+        params = model.init(jax.random.PRNGKey(1))
+        toks = jax.random.randint(jax.random.PRNGKey(5), (2, 6), 1,
+                                  cfg.vocab_size)
+        ld, cd = model.prefill(params, model.init_cache(2, 16), tokens=toks)
+        lp, cp = model.prefill(
+            params, model.init_cache(2, 16, kind="paged", page_size=8),
+            tokens=toks)
+        for t in range(4):
+            ld, cd = model.decode_step(params, cd, tokens=toks[:, t])
+            lp, cp = model.decode_step(params, cp, tokens=toks[:, t])
+            np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp))
