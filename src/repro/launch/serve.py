@@ -49,6 +49,17 @@ def main():
     ap.add_argument("--pages", type=int, default=0,
                     help="paged backend: pool size in pages (0 = full "
                          "provisioning, slots * pages-per-slot)")
+    ap.add_argument("--draft-arch", default="", choices=[""] + list(ARCH_IDS),
+                    help="engine speculative decoding: drafter arch (same "
+                         "arch = weight-shared drafter, 100%% acceptance "
+                         "smoke; needs --engine)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per slot per tick")
+    ap.add_argument("--spec-mode", default="match",
+                    choices=["match", "rejection"],
+                    help="verify sampler: 'match' replays the plain "
+                         "engine's stream bit-for-bit; 'rejection' is "
+                         "classic rejection sampling")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0,
                     help="on-device sampler top-k truncation (0 = off)")
@@ -76,11 +87,25 @@ def main():
         slots = args.slots or args.batch
         n_req = 2 * args.batch
         max_len = 2 * args.prompt_len + args.steps + 8
+        spec_kw = {}
+        if args.draft_arch:
+            if args.draft_arch == args.arch:
+                # weight-shared drafter: agreement (and acceptance) by
+                # construction — the spec-path smoke configuration
+                dmodel, dparams = model, params
+            else:
+                dcfg = get_config(args.draft_arch)
+                if args.smoke:
+                    dcfg = reduced_config(dcfg)
+                dmodel = build_model(dcfg)
+                dparams = dmodel.init(jax.random.PRNGKey(1))
+            spec_kw = {"draft_model": dmodel, "draft_params": dparams,
+                       "spec_k": args.spec_k, "spec_mode": args.spec_mode}
         engine = ServeEngine(model, params, slots=slots, max_len=max_len,
                              prefill_chunk=chunk, top_k=top_k, top_p=top_p,
                              cache_kind=args.cache_kind,
                              page_size=args.page_size or None,
-                             pages=args.pages or None)
+                             pages=args.pages or None, **spec_kw)
         lens = rng.integers(max(1, args.prompt_len // 2),
                             args.prompt_len + 1, n_req)
         t0 = time.time()
@@ -94,6 +119,15 @@ def main():
         print(f"engine[{engine.cache_kind}]: served {n_req} ragged requests "
               f"(prompt lens {lens.min()}..{lens.max()}) on {slots} slots: "
               f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s)")
+        if args.draft_arch:
+            st = engine.spec_stats
+            rate = engine.acceptance_rate
+            print(f"spec[k={args.spec_k}, {args.spec_mode}]: "
+                  f"{st['ticks']} ticks, {st['drafted']} drafted, "
+                  f"{st['accepted']} accepted "
+                  f"({0.0 if rate is None else rate:.2%}), "
+                  f"{st['emitted']} emitted "
+                  f"({st['emitted'] / max(st['ticks'], 1):.2f} tok/tick)")
         uid0 = min(results)
         print("sample:", results[uid0][:16])
         return

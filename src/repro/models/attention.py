@@ -207,6 +207,47 @@ def decode_step(cfg: ModelConfig, p, x, cache, pos, start=None):
     return _finish(cfg, p, out), new
 
 
+def verify_step(cfg: ModelConfig, p, x, cache, pos, start=None):
+    """Speculative-verify burst: S tokens per sequence at PER-SEQUENCE
+    positions — the multi-token twin of ``decode_step`` (where
+    ``prefill_step`` is its static-offset batch twin).  x: [B, S, D];
+    pos: [B] int32 (each serving slot at its own depth).
+
+    All S rows are rotated and written through ``cache.write_tokens``
+    (positions ``pos .. pos+S-1``), then every query attends over the
+    SAME full-width storage-order operands decode reads, under a
+    per-query mask (``verify_view``) that reproduces, row for row, the
+    mask of the S decode ticks it replaces — so on the jnp oracle path
+    each query's output is bit-identical to plain decode, which is what
+    makes temperature-0 speculative acceptance exact.  ``chunk`` is
+    pinned to one kv block for the same reason: the auto-chunked
+    online-softmax would reorder the f32 reduction decode performs in
+    one block.
+
+    Rollback is the caller's ``pos`` reset (+ block-table restore for
+    paged): rejected rows are invisible to every subsequent masked read
+    and are rewritten before their position is reached.
+    """
+    b, s, _ = x.shape
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    start_b = (jnp.zeros((b,), jnp.int32) if start is None
+               else jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)))
+    positions = (pos_b - start_b)[:, None] + jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _project(cfg, p, x, positions)          # q: [B,S,H,hd]
+
+    new = cache.write_tokens(k, v, pos_b)
+    kop, vop, ks, vs, valid = new.verify_view(pos_b, start_b, s)
+    dt = L.cdtype(cfg)
+    if kop.dtype == jnp.int8:
+        kop, vop = kop.astype(dt), vop.astype(dt)
+    out = attn_ops.masked_attention(
+        q.transpose(0, 2, 1, 3), kop.transpose(0, 2, 1, 3),
+        vop.transpose(0, 2, 1, 3), valid=valid,
+        k_scale=_scale_op(ks), v_scale=_scale_op(vs),
+        chunk=kop.shape[1])
+    return _finish(cfg, p, out), new
+
+
 def prefill_step(cfg: ModelConfig, p, x, cache, start=None, pos0: int = 0):
     """Prompt-chunk forward with KV cache write-through: the batched twin
     of ``decode_step``.  x: [B, S, D] -> (y [B, S, D], updated cache).

@@ -100,13 +100,25 @@ def quantize_kv(t):
 
 
 def token_update(c, new, slot, per_seq: bool):
-    """Write one [B, 1, ...] row at ``slot`` (decode)."""
+    """Write [B, S, ...] rows at ``slot .. slot+S-1`` (decode / verify
+    burst; S=1 is the plain decode tick)."""
     new = new.astype(c.dtype)
     if per_seq:  # one write index per sequence (serving slots)
         return jax.vmap(
             lambda cb, nb, sb: jax.lax.dynamic_update_slice_in_dim(
                 cb, nb, sb, 0))(c, new, slot)
     return jax.lax.dynamic_update_slice_in_dim(c, new, slot, 1)
+
+
+def burst_valid(pos_b, start_b, s: int, w: int):
+    """[B, S, W] causal validity for a multi-token verify burst over a
+    position-ordered width-``w`` view: query t (absolute position
+    ``pos_b + t``) sees columns ``start_b .. pos_b + t`` — exactly the
+    mask ``s`` successive decode ticks would apply, stacked."""
+    qpos = pos_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # [B, S]
+    col = jnp.arange(w, dtype=jnp.int32)[None, None, :]
+    return ((col <= qpos[:, :, None])
+            & (col >= start_b[:, None, None]))
 
 
 def prompt_update(c, new, pos0: int, ring: bool):
@@ -207,6 +219,43 @@ class KVCache(CacheSlots):
         return (replace(self, k=upd(self.k, kc), v=upd(self.v, vc)),
                 kc, vc, None, None)
 
+    # .. speculative decoding ..
+    #
+    # A verify burst writes K+1 rows at per-slot positions
+    # (``write_tokens``) and reads them back through a position-ordered
+    # full-width view with a per-query mask (``verify_view``) — the
+    # multi-token twin of ``write_token``/``token_view``.  Rolling a
+    # rejected draft back is a LAYOUT operation, not a data one: rows
+    # past the accepted position are invisible to every masked read and
+    # are rewritten before the position is reached, so row backends roll
+    # back by resetting the engine's ``pos`` vector alone; the paged
+    # backend additionally snapshots its block table (``fork``) so page
+    # mappings can be restored (``rollback``).
+
+    def write_tokens(self, k, v, pos):
+        """Write ``S`` rows per sequence at positions ``pos .. pos+S-1``
+        (``pos``: [B] int32; k/v: [B, S, H, hd]).  Parity contract:
+        bit-identical to S sequential ``write_token`` calls."""
+        raise NotImplementedError
+
+    def verify_view(self, pos_b, start_b, s: int):
+        """Multi-query read for a verify burst: position-ordered
+        ``(k, v, k_s, v_s, valid)`` operands with ``valid`` [B, S, W] —
+        query t masked exactly like the decode tick at ``pos_b + t``."""
+        raise NotImplementedError
+
+    def fork(self):
+        """Speculative checkpoint taken BEFORE a verify burst writes;
+        returns the snapshot ``rollback`` restores (None for row
+        backends — see the protocol note above)."""
+        return None
+
+    def rollback(self, snap):
+        """Restore a ``fork`` snapshot after rejected drafts.  Row
+        backends: no-op (the engine's ``pos`` reset is the rollback)."""
+        del snap
+        return self
+
     # subclasses: write_token / token_view / write_prompt / context
 
 
@@ -225,12 +274,22 @@ class DenseCache(KVCache):
             lambda c, n: token_update(c, n, pos, per_seq), k, v)
         return new
 
+    def write_tokens(self, k, v, pos):
+        # slot = position: the decode row write already takes [B, S, ...]
+        new, *_ = self._write(
+            lambda c, n: token_update(c, n, pos, per_seq=True), k, v)
+        return new
+
     def token_view(self, pos_b, start_b):
         b, w = pos_b.shape[0], self.width
         idx = jnp.arange(w)[None, :]
         slot_pos = jnp.broadcast_to(idx, (b, w))
         valid = ((slot_pos >= 0) & (slot_pos <= pos_b[:, None])
                  & (slot_pos >= start_b[:, None]))
+        return self.k, self.v, self.k_s, self.v_s, valid
+
+    def verify_view(self, pos_b, start_b, s: int):
+        valid = burst_valid(pos_b, start_b, s, self.width)
         return self.k, self.v, self.k_s, self.v_s, valid
 
     def write_prompt(self, k, v, pos0: int):
@@ -270,6 +329,29 @@ class RingCache(KVCache):
         new, *_ = self._write(
             lambda c, n: token_update(c, n, slot, per_seq), k, v)
         return new
+
+    def write_tokens(self, k, v, pos):
+        b, s = k.shape[:2]
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        slots = (pos_b[:, None]
+                 + jnp.arange(s, dtype=jnp.int32)[None, :]) % self.width
+        new, *_ = self._write(
+            lambda c, n: jax.vmap(lambda cb, nb, ib: cb.at[ib].set(nb))(
+                c, n, slots), k, v)
+        return new
+
+    def verify_view(self, pos_b, start_b, s: int):
+        # A burst write EVICTS ring rows that the burst's earlier queries
+        # still attend to (slot = pos % W aliases past and future), and a
+        # rolled-back ``pos`` would re-interpret surviving future rows as
+        # stale past positions — there is no mask that makes a
+        # multi-token verify over the ring match sequential decode.
+        # Sliding-window models serve speculation-free.
+        raise ValueError(
+            "RingCache does not support speculative verify bursts: a "
+            "K-token write evicts window rows earlier burst queries "
+            "need, and rollback cannot restore them (slot = pos % W). "
+            "Serve sliding-window models with plain decode.")
 
     def token_view(self, pos_b, start_b):
         b, w = pos_b.shape[0], self.width
@@ -341,6 +423,34 @@ class PagedCache(KVCache):
         pid = jnp.take_along_axis(self.block_table, pp[:, None], axis=1)[:, 0]
         new, *_ = self._write(lambda c, n: c.at[pid, off].set(n[:, 0]), k, v)
         return new
+
+    def write_tokens(self, k, v, pos):
+        b, s = k.shape[:2]
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        cols = pos_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        off = cols % self.page_size                           # [B, S]
+        pid = jnp.take_along_axis(self.block_table,
+                                  cols // self.page_size, axis=1)
+        new, *_ = self._write(lambda c, n: c.at[pid, off].set(n), k, v)
+        return new
+
+    def verify_view(self, pos_b, start_b, s: int):
+        # burst read = the gathered position-ordered view (the verify
+        # dispatch is matmul-shaped; the in-place kernel stays the
+        # single-query decode path)
+        valid = burst_valid(pos_b, start_b, s, self.width)
+        sl = lambda c: None if c is None else self._gather(c)
+        return sl(self.k), sl(self.v), sl(self.k_s), sl(self.v_s), valid
+
+    def fork(self):
+        """Block-table snapshot: rollback must restore page MAPPINGS
+        (a verify burst may have crossed into pages the accepted prefix
+        never reached), not page contents — rejected rows are masked and
+        rewritten exactly like a dense cache's."""
+        return self.block_table
+
+    def rollback(self, snap):
+        return replace(self, block_table=snap)
 
     def token_view(self, pos_b, start_b):
         """In-place decode read: pool + table, NO gathered copy.  The

@@ -175,6 +175,31 @@ def prefill_step(cfg: ModelConfig, p, x, cache, mask=None):
     decode: pad columns contribute zeros to the conv window and leave the
     SSD state untouched.
     """
+    out, new, _ = _scan_core(cfg, p, x, cache, mask, collect=False)
+    return out, new
+
+
+def verify_step(cfg: ModelConfig, p, x, cache):
+    """Speculative-verify burst: the same write-through scan as
+    ``prefill_step``, additionally emitting EVERY per-step post-state —
+    an SSM has no position vector to roll back, so accept/rollback must
+    SELECT the state after the last accepted token.  x: [B, S, D] ->
+    (y [B, S, D], cache after all S steps, states :class:`SSMCache` with
+    leaves [B, S, ...]: ``states[b, t]`` is the (conv, ssd) state after
+    feeding token t — ``select_state(states, n_acc)`` restores it)."""
+    return _scan_core(cfg, p, x, cache, None, collect=True)
+
+
+def select_state(states: SSMCache, sel) -> SSMCache:
+    """Pick each sequence's post-state at step ``sel[b]`` from verify's
+    stacked states ([B, S, ...] leaves) — the SSM rollback primitive."""
+    def take(st):
+        idx = sel.reshape((-1,) + (1,) * (st.ndim - 1))
+        return jnp.take_along_axis(st, idx, axis=1)[:, 0]
+    return SSMCache(conv=take(states.conv), ssd=take(states.ssd))
+
+
+def _scan_core(cfg: ModelConfig, p, x, cache, mask, collect: bool):
     s = cfg.ssm
     b, slen, _ = x.shape
     d_inner, nheads, conv_dim = dims(cfg)
@@ -214,12 +239,23 @@ def prefill_step(cfg: ModelConfig, p, x, cache, mask=None):
         if mask is not None:
             h2 = jnp.where(mt[:, None, None, None], h2, h)
         yt = yt + xh_t * p["d_skip"].astype(jnp.float32)[None, :, None]
-        return h2, yt
+        return h2, (yt, h2) if collect else yt
 
     tmask = (jnp.ones((b, slen), bool) if mask is None else mask)
     new_ssd, ys = jax.lax.scan(
         step, cache.ssd,
         (jnp.arange(slen), jnp.moveaxis(dtt, 1, 0), jnp.moveaxis(tmask, 1, 0)))
+    states = None
+    if collect:
+        ys, hs = ys
+        # conv state after step t = the window ending at hist column
+        # t+W-1 — slices of the already-materialized hist, not a scan y
+        conv_states = jnp.stack(
+            [hist[:, t + 1:t + s.conv_width] for t in range(slen)],
+            axis=1).astype(cache.conv.dtype)              # [B, S, W-1, C]
+        states = SSMCache(conv=conv_states,
+                          ssd=jnp.moveaxis(hs, 0, 1))     # [B, S, H, P, N]
     y_flat = jnp.moveaxis(ys, 0, 1).reshape(b, slen, d_inner).astype(dtype)
     out = _gated_out(cfg, p, y_flat, z)
-    return out, SSMCache(conv=new_conv.astype(cache.conv.dtype), ssd=new_ssd)
+    new = SSMCache(conv=new_conv.astype(cache.conv.dtype), ssd=new_ssd)
+    return out, new, states

@@ -96,6 +96,31 @@ def _layer_decode(cfg: ModelConfig, spec, p, x, cache, pos, dist=None,
     return x, cache
 
 
+def _layer_verify(cfg: ModelConfig, spec, p, x, cache, pos, dist=None,
+                  start=None):
+    """Multi-token verify burst at per-sequence positions.  Returns
+    (x, new per-layer cache, SSM per-step states or None)."""
+    mixer, ffn = spec
+    states = None
+    if mixer == "attn":
+        h = L.norm_apply(cfg, p["mixer_norm"], x)
+        y, cache = attention.verify_step(cfg, p["mixer"], h, cache, pos,
+                                         start=start)
+        x = x + y
+    elif mixer == "ssm":
+        h = L.norm_apply(cfg, p["mixer_norm"], x)
+        y, cache, states = ssm.verify_step(cfg, p["mixer"], h, cache)
+        x = x + y
+    if ffn == "dense":
+        h = L.norm_apply(cfg, p["ffn_norm"], x)
+        x = x + L.mlp_apply(cfg, p["ffn"], h)
+    elif ffn == "moe":
+        h = L.norm_apply(cfg, p["ffn_norm"], x)
+        y, _ = _moe_apply(cfg, p["ffn"], h, dist)
+        x = x + y
+    return x, cache, states
+
+
 def _layer_prefill(cfg: ModelConfig, spec, p, x, cache, start=None,
                    pad_mask=None, dist=None, pos0: int = 0):
     """Prompt-chunk layer forward that writes the decode cache through.
@@ -381,6 +406,69 @@ class Model:
         new_cache["layers"] = new_layer_caches
         new_cache["pos"] = pos + 1
         return logits[:, 0], new_cache
+
+    def verify_step(self, params, cache, tokens):
+        """Speculative-verify burst: S tokens for the whole batch at
+        per-slot depths in ONE dispatch — the B×S GEMM-shaped twin of
+        ``decode_step``'s B×1 tick.  tokens: [B, S] int32 (column 0 is
+        the already-sampled next token, columns 1.. the drafts).
+
+        Returns (logits [B, S, V], new cache at pos+S, states): position
+        t's logits are bit-identical (oracle path) to what S sequential
+        ``decode_step`` calls would produce given the same prefix, which
+        is the property speculative acceptance rests on.  ``states``
+        mirrors the group structure with each SSM layer's per-step
+        post-states ([G, B, S, ...] leaves; None at attention
+        positions) — ``select_ssm_states`` rolls the returned cache back
+        to any accepted length.  Attention layers roll back by the
+        caller's ``pos`` reset (+ paged block-table restore) alone.
+        """
+        cfg = self.cfg
+        pos = cache["pos"]
+        start = cache.get("start")
+        x = L.embed_apply(cfg, params["embed"], tokens)
+
+        def group_body(carry, scan_in):
+            x, full_cache = carry
+            gparams, g = scan_in
+            gcache = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, g, 0,
+                                                       keepdims=False),
+                full_cache)
+            new_caches, gstates = [], []
+            for i, spec in enumerate(cfg.group):
+                x, c, st = _layer_verify(cfg, spec, gparams[i], x, gcache[i],
+                                         pos, self.dist, start)
+                new_caches.append(c)
+                gstates.append(st)
+            full_cache = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), g, 0),
+                full_cache, tuple(new_caches))
+            return (x, full_cache), tuple(gstates)
+
+        (x, new_layer_caches), states = jax.lax.scan(
+            group_body, (x, cache["layers"]),
+            (params["groups"], jnp.arange(cfg.num_groups)))
+        x = L.norm_apply(cfg, params["final_norm"], x)
+        logits = L.lm_head_apply(cfg, params.get("lm_head"), params["embed"], x)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_caches
+        new_cache["pos"] = pos + tokens.shape[1]
+        return logits, new_cache, states
+
+    def select_ssm_states(self, layers, states, sel):
+        """Roll every SSM layer cache back to the post-state at step
+        ``sel[b]`` (from ``verify_step``'s stacked states); non-SSM
+        layer caches pass through untouched."""
+        out = []
+        for c, st in zip(layers, states):
+            if st is None:
+                out.append(c)
+            else:
+                out.append(jax.vmap(ssm.select_state, in_axes=(0, None))(
+                    st, sel))
+        return tuple(out)
 
     def _attn_cache_width(self, cache) -> int | None:
         """Logical kv width of the attention cache backend (None:

@@ -27,23 +27,10 @@ import jax.numpy as jnp
 _NEG_INF = jnp.float32(-1e30)
 
 
-def sample_logits(logits, keys, temperature, *, top_k: int | None = None,
-                  top_p: float | None = None, done=None, pad_id: int = 0):
-    """Sample one token per row.  logits: [B, V]; keys: [B, 2] uint32;
-    temperature: [B] f32.  Returns (tokens [B] int32, new_keys [B, 2]).
-
-    Build a per-configuration jitted callable with :func:`make_sampler`
-    rather than calling this in a loop (top_k/top_p/pad_id are static).
-    """
-    l32 = logits.astype(jnp.float32)
-    b, v = l32.shape
-    split = jax.vmap(jax.random.split)(keys)          # [B, 2, 2]
-    sub, new_keys = split[:, 0], split[:, 1]
-
-    temperature = jnp.broadcast_to(
-        jnp.asarray(temperature, jnp.float32), (b,))
-    tsafe = jnp.where(temperature > 0, temperature, 1.0)[:, None]
-    lt = l32 / tsafe
+def _truncate(lt, top_k, top_p):
+    """Per-row top-k / nucleus logit truncation (row-wise: each row's
+    result depends only on that row)."""
+    b, v = lt.shape
     if top_k is not None and top_k < v:
         kth = jax.lax.top_k(lt, top_k)[0][:, -1:]     # [B, 1]
         lt = jnp.where(lt < kth, _NEG_INF, lt)
@@ -58,11 +45,38 @@ def sample_logits(logits, keys, temperature, *, top_k: int | None = None,
         keep = jnp.zeros_like(keep_sorted).at[
             jnp.arange(b)[:, None], order].set(keep_sorted)
         lt = jnp.where(keep, lt, _NEG_INF)
+    return lt
 
+
+def _sample_from(l32, sub, temperature, top_k, top_p):
+    """The post-split sampler body: one token per row from ALREADY-split
+    subkeys.  Row-wise (top-k, sort, cumsum, Gumbel, argmax all act per
+    row), so calling it on a [B*S, V] flattening of S stacked decode
+    ticks reproduces each tick's token bit-for-bit — the property the
+    speculative verifier builds on."""
+    b, v = l32.shape
+    temperature = jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32), (b,))
+    tsafe = jnp.where(temperature > 0, temperature, 1.0)[:, None]
+    lt = _truncate(l32 / tsafe, top_k, top_p)
     gumbel = jax.vmap(lambda k: jax.random.gumbel(k, (v,), jnp.float32))(sub)
     sampled = jnp.argmax(lt + gumbel, axis=-1)
     greedy = jnp.argmax(l32, axis=-1)
-    tok = jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+
+
+def sample_logits(logits, keys, temperature, *, top_k: int | None = None,
+                  top_p: float | None = None, done=None, pad_id: int = 0):
+    """Sample one token per row.  logits: [B, V]; keys: [B, 2] uint32;
+    temperature: [B] f32.  Returns (tokens [B] int32, new_keys [B, 2]).
+
+    Build a per-configuration jitted callable with :func:`make_sampler`
+    rather than calling this in a loop (top_k/top_p/pad_id are static).
+    """
+    l32 = logits.astype(jnp.float32)
+    split = jax.vmap(jax.random.split)(keys)          # [B, 2, 2]
+    sub, new_keys = split[:, 0], split[:, 1]
+    tok = _sample_from(l32, sub, temperature, top_k, top_p)
     if done is not None:
         tok = jnp.where(done, jnp.int32(pad_id), tok)
     return tok, new_keys
@@ -83,6 +97,119 @@ def make_sampler(top_k: int | None = None, top_p: float | None = None,
         return sample_logits(logits, keys, temperature, top_k=top_k,
                              top_p=top_p, done=done, pad_id=pad_id)
     return sampler
+
+
+# --- speculative verify ------------------------------------------------------
+
+def greedy_verify(logits, draft):
+    """All-greedy verify: tokens = per-position argmax; draft i is
+    accepted while it matches.  logits: [B, S, V]; draft: [B, S-1].
+    Returns (tokens [B, S] int32, n_acc [B] int32) — no PRNG touched,
+    the spec twin of the engine's argmax fast path."""
+    tokens = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+    ok = (draft == tokens[:, :-1]).astype(jnp.int32)
+    n_acc = jnp.cumprod(ok, axis=1).sum(axis=1)
+    return tokens, n_acc
+
+
+def spec_verify(logits, draft, keys, temperature, *, top_k: int | None = None,
+                top_p: float | None = None, mode: str = "match"):
+    """Speculative accept/sample over one verify burst.
+
+    logits: [B, S, V] target logits at the burst positions (column 0 =
+    the last committed token's position); draft: [B, S-1] drafted
+    tokens; keys: [B, 2]; temperature: [B].  Returns (tokens [B, S],
+    n_acc [B], new_keys [B, 2]): the engine emits ``tokens[b, :n_acc[b]
+    + 1]`` — ``n_acc`` accepted drafts plus the free token the target's
+    own distribution supplies at the first mismatch (or as the bonus
+    after a clean sweep).
+
+    ``mode="match"`` (Gumbel-coupled): position i draws the token the
+    plain engine would have sampled at that position — the slot's key
+    chain is advanced per EMITTED token exactly as ``sample_logits``
+    advances it per tick, and the i-th chain subkey feeds the same
+    row-wise Gumbel/truncation body (:func:`_sample_from`).  A draft is
+    accepted iff it equals that would-be token, so the emitted stream is
+    bit-identical to plain decode at EVERY temperature/top-k/top-p
+    setting (temperature 0 degenerates to argmax matching), and a
+    rolled-back slot's PRNG replay is untouched by construction: only
+    the ``n_acc + 1`` consumed splits advance the chain.
+
+    ``mode="rejection"``: classic speculative rejection sampling against
+    the greedy (one-hot) drafter — accept draft d with probability
+    p_target(d), else sample from the renormalized residual (exact
+    target marginals, higher acceptance at temperature > 0, but the
+    stream no longer replays the plain engine's).  Greedy rows fall
+    back to argmax matching.
+    """
+    if mode not in ("match", "rejection"):
+        raise ValueError(f"unknown spec_verify mode {mode!r}")
+    l32 = logits.astype(jnp.float32)
+    b, s, v = l32.shape
+    temperature = jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32), (b,))
+
+    # per-slot key chain: subkey i samples emitted index i, chain[i] is
+    # the slot key AFTER i+1 consumed tokens (= i+1 sample_logits calls)
+    def chain_step(k, _):
+        sp = jax.vmap(jax.random.split)(k)            # [B, 2, 2]
+        return sp[:, 1], (sp[:, 0], sp[:, 1])
+    _, (subs, chain) = jax.lax.scan(chain_step, keys, None, length=s)
+
+    flat = l32.reshape(b * s, v)                      # row = b * S + t
+    sub_flat = jnp.moveaxis(subs, 0, 1).reshape(b * s, 2)
+    temp_flat = jnp.repeat(temperature, s)
+    greedy = jnp.argmax(l32, axis=-1).astype(jnp.int32)
+
+    if mode == "match":
+        tokens = _sample_from(flat, sub_flat, temp_flat,
+                              top_k, top_p).reshape(b, s)
+        ok = (draft == tokens[:, :-1]).astype(jnp.int32)
+    else:
+        tsafe = jnp.where(temp_flat > 0, temp_flat, 1.0)[:, None]
+        lt = _truncate(flat / tsafe, top_k, top_p).reshape(b, s, v)
+        probs = jax.nn.softmax(lt, axis=-1)
+        sp2 = jax.vmap(jax.random.split)(sub_flat)    # [B*S, 2, 2]
+        u = jax.vmap(lambda k: jax.random.uniform(k, ()))(
+            sp2[:, 0]).reshape(b, s)
+        p_draft = jnp.take_along_axis(
+            probs[:, :-1], draft[..., None].astype(jnp.int32), -1)[..., 0]
+        hot = temperature[:, None] > 0
+        ok = jnp.where(hot, u[:, :-1] < p_draft,
+                       draft == greedy[:, :-1]).astype(jnp.int32)
+        # first-mismatch token: residual sample (draft token excluded —
+        # exact residual for a one-hot greedy drafter); clean sweep:
+        # a standard sample at the bonus position
+        res_lt = jnp.where(
+            jax.nn.one_hot(draft, v, dtype=bool), _NEG_INF, lt[:, :-1])
+        g_res = jax.vmap(
+            lambda k: jax.random.gumbel(k, (v,), jnp.float32))(
+                sp2[:, 1]).reshape(b, s, v)
+        res_tok = jnp.argmax(res_lt + g_res[:, :-1], -1).astype(jnp.int32)
+        bonus = _sample_from(flat, sub_flat, temp_flat,
+                             top_k, top_p).reshape(b, s)[:, -1:]
+        alt = jnp.where(hot, jnp.concatenate([res_tok, bonus], 1), greedy)
+        accepted_path = jnp.concatenate([draft, draft[:, -1:]], 1)
+        n_acc_r = jnp.cumprod(ok, axis=1).sum(axis=1)
+        tokens = jnp.where(
+            jnp.arange(s)[None, :] < n_acc_r[:, None], accepted_path, alt)
+
+    n_acc = jnp.cumprod(ok, axis=1).sum(axis=1)
+    new_keys = jnp.take_along_axis(                   # chain[n_acc] per slot
+        jnp.moveaxis(chain, 0, 1), n_acc[:, None, None], axis=1)[:, 0]
+    return tokens, n_acc.astype(jnp.int32), new_keys
+
+
+@functools.lru_cache(maxsize=None)
+def make_spec_verifier(top_k: int | None = None, top_p: float | None = None,
+                       mode: str = "match"):
+    """Jitted (logits [B,S,V], draft [B,S-1], keys, temperature) ->
+    (tokens, n_acc, new_keys) verifier; memoized like make_sampler."""
+    @jax.jit
+    def verifier(logits, draft, keys, temperature):
+        return spec_verify(logits, draft, keys, temperature,
+                           top_k=top_k, top_p=top_p, mode=mode)
+    return verifier
 
 
 def init_keys(seed_or_key, batch: int):

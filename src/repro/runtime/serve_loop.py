@@ -256,6 +256,33 @@ class ServeEngine:
       behavior).
 
     ``on_token(uid, token, done)`` streams tokens as they are sampled.
+
+    SPECULATIVE DECODING (``draft_model``/``draft_params``): a small
+    drafter proposes ``spec_k`` greedy tokens per slot per tick (ONE
+    jitted scan dispatch over K+1 drafter decode steps, the extra step
+    pre-writing the last draft's row so a clean sweep needs no
+    catch-up), the target scores all K+1 positions in ONE batched
+    ``verify_step`` dispatch (B×K+1 GEMM-shaped — the matmul shape the
+    EN-T engines are built for, vs. decode's B×1 GEMV), and each slot
+    commits its longest accepted prefix plus the free token the
+    target's own distribution supplies at the first mismatch.  Rollback
+    is O(1) layout work, not data work: the per-slot ``pos`` vector
+    resets to the accepted depth (rejected rows are invisible to every
+    masked read and rewritten in place), SSM layers select the
+    after-accepted-token state from the verify scan's stacked per-step
+    states, and the paged allocator's mapped-ahead pages stay within
+    the slot's reservation (``_pages_needed`` reserves ``spec_k`` extra
+    pages so a verify burst can never exhaust the pool mid-tick).  At
+    temperature 0 the emitted streams are bit-identical to plain
+    decode; ``spec_mode="match"`` (default) keeps that guarantee at
+    every temperature/top-k/top-p by Gumbel-coupling acceptance to the
+    plain sampler's key chain, and keys advance once per EMITTED token,
+    so replay is unaffected by rejected drafts.  ``spec_mode=
+    "rejection"`` trades replay-identity for classic rejection-sampling
+    acceptance.  Sliding-window (ring) targets and drafters are
+    rejected: a burst write evicts window rows rollback cannot restore.
+    The drafter must share the target's tokenizer (vocab); its KV runs
+    a dense cache prefilled alongside the target's at admission.
     """
 
     def __init__(self, model: Model, params, *, slots: int = 4,
@@ -264,7 +291,9 @@ class ServeEngine:
                  prefill_chunk: int | None = None, top_k: int | None = None,
                  top_p: float | None = None, on_token=None,
                  cache_kind: str | None = None, page_size: int | None = None,
-                 pages: int | None = None):
+                 pages: int | None = None, draft_model: Model | None = None,
+                 draft_params=None, spec_k: int = 4,
+                 spec_mode: str = "match"):
         if slots < 1:
             raise ValueError(f"ServeEngine needs at least one slot, got {slots}")
         if cache_kind in (None, "auto"):
@@ -342,6 +371,81 @@ class ServeEngine:
         self._results: dict[int, list[int]] = {}
         self._next_uid = 0
 
+        # .. speculative decoding ..
+        self._spec = draft_model is not None
+        self.spec_stats = {"ticks": 0, "drafted": 0, "accepted": 0,
+                           "emitted": 0}
+        if not self._spec:
+            return
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        if self.cache_kind == "ring":
+            raise ValueError(
+                "speculative decoding is unsupported on the ring backend: "
+                "a K-token verify burst evicts sliding-window rows that "
+                "rollback cannot restore (see kv_cache.RingCache."
+                "verify_view)")
+        if draft_model.cfg.sliding_window:
+            raise ValueError(
+                "sliding-window drafters are unsupported: rolling the "
+                "drafter's ring back past an eviction would resurface "
+                "overwritten rows as stale history")
+        if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+            raise ValueError(
+                f"drafter vocab ({draft_model.cfg.vocab_size}) != target "
+                f"vocab ({model.cfg.vocab_size}): speculative pairs must "
+                "share a tokenizer")
+        self.spec_k, self.spec_mode = spec_k, spec_mode
+        self.draft_model, self.draft_params = draft_model, draft_params
+        dcache = draft_model.init_cache(slots, max_len, kind="dense")
+        dcache["pos"] = jnp.zeros((slots,), jnp.int32)
+        dcache["start"] = jnp.zeros((slots,), jnp.int32)
+        self._dcache = dcache
+
+        def _dprefill_into(dp, toks, mask, layers):
+            c = {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+            return draft_model.prefill(dp, c, tokens=toks, pad_mask=mask,
+                                       chunk=prefill_chunk)
+
+        self._dprefill = jax.jit(_dprefill_into)
+
+        def _draft_fn(dp, dcache, tok0, k):
+            # K+1 drafter decode steps as ONE scan dispatch: iteration i
+            # consumes the token at position pos+i and proposes the
+            # next; the (K+1)-th writes the last draft's KV row so a
+            # clean sweep leaves the drafter fully caught up.  SSM layer
+            # states are snapshotted per step ([K+1, G, B, ...] ys) for
+            # the post-acceptance rollback select.
+            def body(carry, _):
+                tok, c = carry
+                logits, c = draft_model.decode_step(dp, c, tokens=tok)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                snap = tuple(
+                    lc if isinstance(lc, kv_cache.SSMCache) else None
+                    for lc in c["layers"])
+                return (nxt, c), (nxt, snap)
+            (_, dc), (toks, snaps) = jax.lax.scan(
+                body, (tok0, dcache), None, length=k + 1)
+            drafts = jnp.moveaxis(toks, 0, 1)[:, :k]        # [B, K]
+            burst = jnp.concatenate([tok0[:, None], drafts], axis=1)
+            return drafts, burst, dc, snaps
+
+        self._draft = jax.jit(_draft_fn, static_argnums=(3,))
+        self._verify = jax.jit(
+            lambda p, c, t: model.verify_step(p, c, tokens=t))
+        self._verifier = sampling.make_spec_verifier(top_k, top_p, spec_mode)
+        self._gverify = jax.jit(sampling.greedy_verify)
+        self._t_has_ssm = any(m == "ssm" for m, _ in model.cfg.group)
+        self._d_has_ssm = any(m == "ssm" for m, _ in draft_model.cfg.group)
+        self._t_select = jax.jit(
+            lambda layers, states, sel: model.select_ssm_states(
+                layers, states, sel))
+        self._d_select = jax.jit(
+            lambda layers, snaps, sel: draft_model.select_ssm_states(
+                layers,
+                jax.tree.map(lambda x: jnp.moveaxis(x, 0, 2), snaps),
+                sel))
+
     # .. request intake ..
     def submit(self, tokens, *, max_new_tokens: int = 32,
                temperature: float = 0.0) -> int:
@@ -382,6 +486,10 @@ class ServeEngine:
             self.cache["start"] = self.cache["start"].at[slot].set(0)
             self._pos[slot] = 0
             self._temp[slot] = 0.0
+            if self._spec:
+                self._dcache["pos"] = self._dcache["pos"].at[slot].set(0)
+                self._dcache["start"] = (
+                    self._dcache["start"].at[slot].set(0))
             if self.cache_kind == "paged":   # pages go back to the pool
                 self._free_pages.extend(self._slot_pages.pop(slot, ()))
                 self._slot_reserved.pop(slot, None)
@@ -394,8 +502,13 @@ class ServeEngine:
 
     def _pages_needed(self, prompt_len: int, max_new: int) -> int:
         """Worst-case pages one request can touch: positions
-        [0, prompt + max_new), capped at the per-slot table length."""
-        return min(-(-(prompt_len + max_new) // self.page_size), self._pps)
+        [0, prompt + max_new), plus ``spec_k`` speculative positions
+        (a verify burst writes up to ``spec_k`` rows past the last
+        committed token, and rollback keeps them mapped), capped at the
+        per-slot table length."""
+        extra = self.spec_k if self._spec else 0
+        return min(-(-(prompt_len + max_new + extra) // self.page_size),
+                   self._pps)
 
     @property
     def page_stats(self) -> dict | None:
@@ -447,6 +560,14 @@ class ServeEngine:
                 self.cache["layers"], c1["layers"], slot)
             self.cache["pos"] = self.cache["pos"].at[slot].set(sp)
             self.cache["start"] = self.cache["start"].at[slot].set(sp - n)
+            if self._spec:   # the drafter shadows the prompt prefill
+                dview = self._view(self._dcache["layers"], slot)
+                _, d1 = self._dprefill(self.draft_params, toks, mask, dview)
+                self._dcache["layers"] = self._admit_slot(
+                    self._dcache["layers"], d1["layers"], slot)
+                self._dcache["pos"] = self._dcache["pos"].at[slot].set(sp)
+                self._dcache["start"] = (
+                    self._dcache["start"].at[slot].set(sp - n))
             self._pos[slot] = sp
             self._active[slot] = _SlotState(req)
             self._temp[slot] = req.temperature
@@ -464,11 +585,15 @@ class ServeEngine:
     def step(self) -> bool:
         """Admit newcomers, then one batched decode tick + one batched
         on-device sample for every active slot (only the [slots] sampled
-        tokens come back to the host).  Returns True while there is (or
-        will be) work left."""
+        tokens come back to the host).  With a drafter the tick is
+        draft-K -> verify-1-dispatch -> accept/rollback instead (see the
+        class docstring).  Returns True while there is (or will be) work
+        left."""
         self._admit()
         if not self._active:
             return bool(self._queue)
+        if self._spec:
+            return self._spec_tick()
         if self.cache_kind == "paged":
             # slots writing their next token past a page boundary each
             # grab one page from their reservation (positions are
@@ -501,6 +626,90 @@ class ServeEngine:
         for slot in list(self._active):
             self._emit(slot, int(toks[slot]))
         return bool(self._active or self._queue)
+
+    def _spec_tick(self) -> bool:
+        """One speculative tick: draft K greedy tokens per slot (one
+        scan dispatch), verify all K+1 positions through the target
+        (one burst dispatch), then commit each slot's accepted prefix
+        and roll the rest back — pos-vector reset for attention rows,
+        per-step state select for SSM layers."""
+        active = list(self._active)
+        # headroom cap: the burst writes rows pos .. pos+tick_k, which
+        # must stay inside max_len for every slot (slots free at
+        # max_len-1, so tick_k >= 1 always)
+        max_pos = max(int(self._pos[s]) for s in active)
+        tick_k = min(self.spec_k, self.max_len - 1 - max_pos)
+        if self.cache_kind == "paged":
+            # map every page the burst can touch up front (from each
+            # slot's reservation): the verify write must never land on
+            # an unmapped (null) page
+            dirty = False
+            for slot in active:
+                p = int(self._pos[slot])
+                for pp in range(p // self.page_size,
+                                (p + tick_k) // self.page_size + 1):
+                    if self._table[slot, pp] == 0:
+                        if not self._free_pages:
+                            raise RuntimeError(
+                                "page reservation accounting is broken: "
+                                "pool exhausted mid-decode")
+                        pid = self._free_pages.pop()
+                        self._slot_pages[slot].append(pid)
+                        self._table[slot, pp] = pid
+                        dirty = True
+            if dirty:
+                self.cache["layers"] = self._set_tables(
+                    self.cache["layers"], jnp.asarray(self._table))
+
+        drafts, burst, dc, snaps = self._draft(
+            self.draft_params, self._dcache, jnp.asarray(self._next_tok),
+            tick_k)
+        vlogits, vcache, states = self._verify(self.params, self.cache,
+                                               burst)
+        if self._temp.any() or self._truncates:
+            toks, n_acc, self._keys = self._verifier(
+                vlogits, drafts, self._keys, jnp.asarray(self._temp))
+        else:              # all-greedy tick: argmax matching, keys idle
+            toks, n_acc = self._gverify(vlogits, drafts)
+
+        layers = vcache["layers"]
+        if self._t_has_ssm:    # SSM rollback: select the accepted state
+            layers = self._t_select(layers, states, n_acc)
+        self.cache["layers"] = layers
+        dlayers = dc["layers"]
+        if self._d_has_ssm:
+            dlayers = self._d_select(dlayers, snaps, n_acc)
+        self._dcache["layers"] = dlayers
+
+        toks_h = np.asarray(toks)        # [B, K+1] + [B]: the only pulls
+        acc_h = np.asarray(n_acc)
+        self.spec_stats["ticks"] += 1
+        for slot in active:
+            a = int(acc_h[slot])
+            self.spec_stats["drafted"] += tick_k
+            self.spec_stats["accepted"] += a
+            # emit the accepted prefix + the free mismatch/bonus token,
+            # advancing the pos mirror per token so EOS / max_new /
+            # max_len stop exactly where plain decode would
+            for j in range(a + 1):
+                self._pos[slot] += 1
+                self.spec_stats["emitted"] += 1
+                if self._emit(slot, int(toks_h[slot, j])):
+                    break
+        # attention rollback IS this pos push: rejected rows sit beyond
+        # every slot's committed depth, masked until overwritten (freed
+        # slots were zeroed by _emit and the mirror agrees)
+        posv = jnp.asarray(self._pos.astype(np.int32))
+        self.cache["pos"] = posv
+        self._dcache["pos"] = posv
+        return bool(self._active or self._queue)
+
+    @property
+    def acceptance_rate(self) -> float | None:
+        """Fraction of drafted tokens accepted (None before any spec
+        tick)."""
+        d = self.spec_stats["drafted"]
+        return None if d == 0 else self.spec_stats["accepted"] / d
 
     def run(self) -> dict[int, list[int]]:
         """Drive until queue and slots drain; returns {uid: emitted tokens}."""

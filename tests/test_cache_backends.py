@@ -171,6 +171,121 @@ class TestPagedGatherOracle:
                                       np.asarray(dv[4]))
 
 
+# --- speculative burst primitives: write_tokens / fork / rollback ------------
+
+def _make_cache(kind, b, w, h, hd, quantized, page=4):
+    if kind == "paged":
+        return kv_cache.paged_init(b, w, h, hd, jnp.bfloat16,
+                                   quantized=quantized, page_size=page)
+    kw = {}
+    dtype = jnp.bfloat16
+    if quantized:
+        kw = {"k_s": jnp.zeros((b, w, h, 1), jnp.bfloat16),
+              "v_s": jnp.zeros((b, w, h, 1), jnp.bfloat16)}
+        dtype = jnp.int8
+    cls = kv_cache.DenseCache if kind == "dense" else kv_cache.RingCache
+    extra = {} if kind == "dense" else {"window": w}
+    return cls(k=jnp.zeros((b, w, h, hd), dtype),
+               v=jnp.zeros((b, w, h, hd), dtype), **kw, **extra)
+
+
+class TestWriteTokensParity:
+    """The speculative burst write: ``write_tokens`` of S rows must be
+    BIT-identical to S sequential ``write_token`` calls on every backend
+    (bf16 and int8-KV) — including a ring wrap and a paged write that
+    crosses page boundaries."""
+
+    @pytest.mark.parametrize("quantized", [False, True])
+    @pytest.mark.parametrize("kind", ["dense", "ring", "paged"])
+    def test_burst_equals_sequential(self, kind, quantized):
+        b, h, hd, s = 2, 2, 4, 5
+        w = 8 if kind == "ring" else 16
+        # slot 1 starts at 6: the ring burst wraps (positions 6..10 over
+        # an 8-ring), the paged burst crosses two page-4 boundaries
+        pos = jnp.asarray([3, 6], jnp.int32)
+        cache = _make_cache(kind, b, w, h, hd, quantized)
+        key = jax.random.PRNGKey(11)
+        kr, vr = _rows(key, b, s, h, hd), _rows(jax.random.fold_in(key, 1),
+                                                b, s, h, hd)
+        burst = cache.write_tokens(kr, vr, pos)
+        seq = cache
+        for t in range(s):
+            seq = seq.write_token(kr[:, t:t + 1], vr[:, t:t + 1], pos + t,
+                                  per_seq=True)
+        assert jax.tree.structure(burst) == jax.tree.structure(seq)
+        for a, e in zip(jax.tree.leaves(burst), jax.tree.leaves(seq)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(e))
+
+    def test_single_token_burst_is_write_token(self):
+        cache = _make_cache("dense", 1, 8, 1, 4, False)
+        kr, vr = _rows(jax.random.PRNGKey(0), 1, 1, 1, 4), \
+            _rows(jax.random.PRNGKey(1), 1, 1, 1, 4)
+        pos = jnp.asarray([2], jnp.int32)
+        a = cache.write_tokens(kr, vr, pos)
+        e = cache.write_token(kr, vr, pos, per_seq=True)
+        np.testing.assert_array_equal(np.asarray(a.k), np.asarray(e.k))
+
+
+class TestForkRollback:
+    """Block-table fork/rollback: a rejected verify burst leaves the
+    paged cache's OBSERVABLE state (mappings + every valid row) exactly
+    where a never-speculated cache sits."""
+
+    def test_rollback_restores_table_and_valid_rows(self):
+        b, w, h, hd, page = 1, 16, 2, 4, 4
+        base = kv_cache.paged_init(b, w, h, hd, jnp.bfloat16,
+                                   page_size=page, mapped=False)
+        table = np.zeros((b, 4), np.int32)
+        table[0, :2] = [1, 2]              # pages covering the 6-row prompt
+        c = base.with_table(jnp.asarray(table))
+        key = jax.random.PRNGKey(3)
+        c = c.write_prompt(_rows(key, b, 6, h, hd),
+                           _rows(jax.random.fold_in(key, 1), b, 6, h, hd),
+                           0)[0]
+        pos = jnp.asarray([6], jnp.int32)
+        start = jnp.zeros((b,), jnp.int32)
+        control = c                        # the never-speculated twin
+
+        snap = c.fork()
+        # the burst maps one page beyond the prompt's (engine pre-map)
+        # and writes rows 6..9 — crossing into the fresh page
+        t2 = table.copy()
+        t2[0, 2] = 3
+        spec = c.with_table(jnp.asarray(t2)).write_tokens(
+            _rows(jax.random.fold_in(key, 2), b, 4, h, hd),
+            _rows(jax.random.fold_in(key, 3), b, 4, h, hd), pos)
+        rolled = spec.rollback(snap)
+
+        # mappings restored: the speculative page is unmapped again
+        np.testing.assert_array_equal(np.asarray(rolled.block_table),
+                                      np.asarray(control.block_table))
+        # the next REAL decode write overwrites the burst's position-6
+        # row; after it, every valid column reads back bit-identical
+        kr = _rows(jax.random.fold_in(key, 4), b, 1, h, hd)
+        vr = _rows(jax.random.fold_in(key, 5), b, 1, h, hd)
+        got = rolled.write_token(kr, vr, pos, per_seq=True)
+        want = control.write_token(kr, vr, pos, per_seq=True)
+        gv, wv = got.gather_view(pos, start), want.gather_view(pos, start)
+        valid = np.asarray(wv[4])
+        np.testing.assert_array_equal(np.asarray(gv[4]), valid)
+        for a, e in zip(gv[:2], wv[:2]):
+            np.testing.assert_array_equal(np.asarray(a)[valid],
+                                          np.asarray(e)[valid])
+
+    def test_row_backends_fork_is_free(self):
+        c = _make_cache("dense", 1, 8, 1, 4, False)
+        assert c.fork() is None
+        assert c.rollback(None) is c
+
+
+class TestRingBurstRejected:
+    def test_ring_verify_view_raises(self):
+        c = _make_cache("ring", 1, 8, 1, 4, False)
+        with pytest.raises(ValueError, match="speculative"):
+            c.verify_view(jnp.asarray([5], jnp.int32),
+                          jnp.zeros((1,), jnp.int32), 3)
+
+
 # --- model-level paged == dense (the acceptance bit-identity) ----------------
 
 class TestPagedDenseModelParity:

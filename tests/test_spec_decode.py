@@ -1,0 +1,290 @@
+"""Speculative decoding: K-token draft/verify with rollback.
+
+Pins the PR's acceptance contract:
+
+* ``Model.verify_step`` over a K+1 token burst is BIT-identical to K+1
+  sequential ``decode_step`` calls (logits and cache) on the dense and
+  paged backends, bf16 and int8-KV;
+* the engine's speculative output equals plain paged decode bit for bit
+  at temperature 0 (greedy fast path) AND at temperature > 0 in the
+  default Gumbel-coupled "match" mode — whatever the drafter proposes;
+* a rolled-back slot's PRNG chain advances once per EMITTED token, so
+  replay is unaffected by rejected drafts (unit: ``spec_verify``'s
+  tokens and new_keys replay sequential ``sample_logits`` calls exactly;
+  engine: a hot-temperature run with a garbage drafter still matches
+  the plain engine's stream);
+* rejection mode: exact greedy behavior at temperature 0, deterministic
+  replay at temperature > 0, tokens always in-vocab;
+* ring targets and sliding-window drafters are rejected up front, and
+  the page pool drains clean after speculative runs (mapped-ahead burst
+  pages stay inside each slot's reservation).
+"""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models.transformer import build_model
+from repro.runtime import sampling
+from repro.runtime.serve_loop import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced_config(get_config("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def drafter(tiny):
+    """A DIVERGENT drafter: same tiny topology, different random
+    weights — near-zero acceptance, so every tick exercises rollback."""
+    cfg, model, _ = tiny
+    return model, model.init(jax.random.PRNGKey(1))
+
+
+_PROMPTS = [[3, 1, 4, 1, 5, 9, 2, 6], [2, 7, 1, 8]]
+
+
+def _serve(model, params, *, spec=None, temp=0.0, max_new=10, **kw):
+    eng = ServeEngine(model, params, slots=2, max_len=64, **(spec or {}),
+                      **kw)
+    uids = [eng.submit(p, max_new_tokens=max_new, temperature=temp)
+            for p in _PROMPTS]
+    res = eng.run()
+    return [res[u] for u in uids], eng
+
+
+def _spec(drafter_pair, k=4, mode="match"):
+    dm, dp = drafter_pair
+    return {"draft_model": dm, "draft_params": dp, "spec_k": k,
+            "spec_mode": mode}
+
+
+# --- verify_step: one burst dispatch == K+1 decode ticks ---------------------
+
+class TestVerifyStepParity:
+    @pytest.mark.parametrize("kind,kv_quant", [
+        ("dense", False), ("paged", False), ("paged", True),
+    ])
+    def test_burst_bit_identical_to_sequential(self, tiny, kind, kv_quant):
+        cfg, _, _ = tiny
+        model = build_model(cfg, kv_quant=kv_quant)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(7), (2, 6), 1,
+                                  cfg.vocab_size)
+        kw = {"page_size": 4} if kind == "paged" else {}
+        _, c0 = model.prefill(
+            params, model.init_cache(2, 32, kind=kind, **kw), tokens=toks)
+        burst = jax.random.randint(jax.random.PRNGKey(9), (2, 5), 1,
+                                   cfg.vocab_size)
+        vlog, vc, _ = model.verify_step(params, c0, tokens=burst)
+        sc = c0
+        for t in range(burst.shape[1]):
+            lt, sc = model.decode_step(params, sc, tokens=burst[:, t])
+            np.testing.assert_array_equal(np.asarray(vlog[:, t]),
+                                          np.asarray(lt))
+        assert jax.tree.structure(vc) == jax.tree.structure(sc)
+        for a, e in zip(jax.tree.leaves(vc), jax.tree.leaves(sc)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(e))
+
+
+# --- spec_verify: the sampler-side accept/rollback ---------------------------
+
+class TestSpecVerifyUnit:
+    def test_match_mode_replays_sequential_sampler(self):
+        """Match mode IS the plain sampler, vectorized: position t draws
+        the token ``sample_logits`` would have drawn at tick t, and
+        new_keys land where the chain sits after n_acc + 1 emitted
+        tokens — rejected drafts never touch the PRNG stream."""
+        b, s, v = 2, 4, 16
+        rng = np.random.default_rng(0)
+        logits = jnp.asarray(rng.normal(size=(b, s, v)).astype(np.float32))
+        keys = sampling.init_keys(5, b)
+        temp = jnp.asarray([0.7, 1.3], jnp.float32)
+        exp, chain, k = [], [keys], keys
+        for t in range(s):
+            tok, k = sampling.sample_logits(logits[:, t], k, temp)
+            exp.append(np.asarray(tok))
+            chain.append(k)
+        exp = np.stack(exp, 1)
+        draft = exp[:, :s - 1].copy()       # slot 0 accepts 2, slot 1 none
+        draft[0, 2] = (draft[0, 2] + 1) % v
+        draft[1, 0] = (draft[1, 0] + 1) % v
+        toks, n_acc, nk = sampling.spec_verify(
+            logits, jnp.asarray(draft), keys, temp)
+        np.testing.assert_array_equal(np.asarray(toks), exp)
+        np.testing.assert_array_equal(np.asarray(n_acc), [2, 0])
+        for i in range(b):
+            np.testing.assert_array_equal(
+                np.asarray(nk[i]), np.asarray(chain[int(n_acc[i]) + 1][i]))
+
+    def test_greedy_verify_counts_matched_prefix(self):
+        b, s, v = 2, 3, 8
+        rng = np.random.default_rng(1)
+        logits = jnp.asarray(rng.normal(size=(b, s, v)).astype(np.float32))
+        am = np.argmax(np.asarray(logits), -1)
+        draft = am[:, :s - 1].copy()
+        draft[1, 1] = (draft[1, 1] + 1) % v
+        toks, n_acc = sampling.greedy_verify(logits, jnp.asarray(draft))
+        np.testing.assert_array_equal(np.asarray(toks), am)
+        np.testing.assert_array_equal(np.asarray(n_acc), [2, 1])
+
+    def test_rejection_temp0_is_greedy(self):
+        b, s, v = 2, 3, 8
+        rng = np.random.default_rng(2)
+        logits = jnp.asarray(rng.normal(size=(b, s, v)).astype(np.float32))
+        draft = jnp.asarray(np.argmax(np.asarray(logits), -1)[:, :s - 1])
+        gt, gn = sampling.greedy_verify(logits, draft)
+        rt, rn, _ = sampling.spec_verify(logits, draft, sampling.init_keys(
+            0, b), jnp.zeros((b,)), mode="rejection")
+        np.testing.assert_array_equal(np.asarray(rt), np.asarray(gt))
+        np.testing.assert_array_equal(np.asarray(rn), np.asarray(gn))
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError, match="mode"):
+            sampling.spec_verify(jnp.zeros((1, 2, 4)),
+                                 jnp.zeros((1, 1), jnp.int32),
+                                 sampling.init_keys(0, 1), jnp.zeros((1,)),
+                                 mode="typical")
+
+
+# --- the engine: spec stream == plain stream ---------------------------------
+
+class TestSpecEngineBitIdentity:
+    def test_divergent_drafter_temp0(self, tiny, drafter):
+        """Near-zero acceptance: every tick rolls back, yet the emitted
+        stream is bit-identical to the plain paged engine's."""
+        cfg, model, params = tiny
+        plain, _ = _serve(model, params)
+        spec, eng = _serve(model, params, spec=_spec(drafter))
+        assert spec == plain
+        assert eng.acceptance_rate is not None
+        assert eng.acceptance_rate < 0.5   # the drafter really diverges
+
+    def test_shared_drafter_full_acceptance(self, tiny):
+        """Weight-shared drafter: agreement by construction — 100%
+        acceptance, K+1 tokens per tick, same stream."""
+        cfg, model, params = tiny
+        plain, _ = _serve(model, params)
+        spec, eng = _serve(model, params, spec=_spec((model, params)))
+        assert spec == plain
+        assert eng.acceptance_rate == 1.0
+        st = eng.spec_stats
+        assert st["emitted"] > 2 * st["ticks"]   # the speedup mechanism
+
+    def test_match_mode_hot_temperature(self, tiny, drafter):
+        """Temperature 0.9 with a garbage drafter: the Gumbel-coupled
+        verifier must still replay the plain engine's sampled stream —
+        the engine-level PRNG-replay guarantee."""
+        cfg, model, params = tiny
+        plain, _ = _serve(model, params, temp=0.9)
+        spec, _ = _serve(model, params, spec=_spec(drafter), temp=0.9)
+        assert spec == plain
+
+    def test_dense_backend(self, tiny, drafter):
+        cfg, model, params = tiny
+        plain, _ = _serve(model, params, cache_kind="dense")
+        spec, _ = _serve(model, params, spec=_spec(drafter),
+                         cache_kind="dense")
+        assert spec == plain
+
+    def test_int8_kv_page_crossing(self, tiny, drafter):
+        """int8-KV target at page_size 2 with K=3: every burst crosses
+        page boundaries and quantizes burst rows."""
+        cfg, _, _ = tiny
+        model = build_model(cfg, kv_quant=True)
+        params = model.init(jax.random.PRNGKey(0))
+        dparams = model.init(jax.random.PRNGKey(1))
+        plain, _ = _serve(model, params, page_size=2)
+        spec, _ = _serve(model, params, page_size=2,
+                         spec=_spec((model, dparams), k=3))
+        assert spec == plain
+
+    @pytest.mark.parametrize("arch", ["jamba-1.5-large", "mamba2-370m"])
+    def test_ssm_rollback(self, arch):
+        """Hybrid (SSM + attention + MoE) and pure-SSM targets: rollback
+        selects the post-accepted-token recurrent state from the verify
+        scan's stacked per-step states."""
+        cfg = reduced_config(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        dparams = model.init(jax.random.PRNGKey(1))
+        plain, _ = _serve(model, params, max_new=6)
+        spec, _ = _serve(model, params, max_new=6,
+                         spec=_spec((model, dparams), k=3))
+        assert spec == plain
+
+    def test_max_new_stops_mid_burst(self, tiny):
+        """A 100%-acceptance tick would overshoot max_new_tokens; the
+        emission loop must stop exactly where plain decode stops."""
+        cfg, model, params = tiny
+        plain, _ = _serve(model, params, max_new=3)
+        spec, _ = _serve(model, params, max_new=3,
+                         spec=_spec((model, params), k=4))
+        assert spec == plain
+        assert all(len(o) == 3 for o in spec)
+
+    def test_rejection_mode_temp0(self, tiny, drafter):
+        cfg, model, params = tiny
+        plain, _ = _serve(model, params)
+        spec, _ = _serve(model, params, spec=_spec(drafter,
+                                                   mode="rejection"))
+        assert spec == plain
+
+    def test_rejection_mode_hot_deterministic(self, tiny, drafter):
+        """Rejection sampling trades replay-of-plain for acceptance; the
+        stream must still be a deterministic function of the seed and
+        stay in-vocab."""
+        cfg, model, params = tiny
+        a, _ = _serve(model, params, spec=_spec(drafter, mode="rejection"),
+                      temp=0.9)
+        b, _ = _serve(model, params, spec=_spec(drafter, mode="rejection"),
+                      temp=0.9)
+        assert a == b
+        assert all(0 <= t < cfg.vocab_size for o in a for t in o)
+
+
+class TestSpecEngineGuards:
+    def test_page_pool_drains_clean(self, tiny, drafter):
+        cfg, model, params = tiny
+        _, eng = _serve(model, params, spec=_spec(drafter), page_size=4)
+        stats = eng.page_stats
+        assert stats["free"] == stats["total"] and stats["reserved"] == 0
+        assert not eng._slot_pages
+        assert (eng._table == 0).all()
+
+    def test_ring_target_rejected(self, tiny):
+        wcfg = reduced_config(get_config("mixtral-8x7b"))
+        wmodel = build_model(wcfg)
+        wparams = wmodel.init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="ring"):
+            ServeEngine(wmodel, wparams, slots=2, max_len=64,
+                        draft_model=wmodel, draft_params=wparams)
+
+    def test_sliding_window_drafter_rejected(self, tiny):
+        cfg, model, params = tiny
+        wmodel = build_model(reduced_config(get_config("mixtral-8x7b")))
+        with pytest.raises(ValueError, match="[Ss]liding-window"):
+            ServeEngine(model, params, slots=2, max_len=64,
+                        draft_model=wmodel, draft_params=None)
+
+    def test_vocab_mismatch_rejected(self, tiny):
+        cfg, model, params = tiny
+        dmodel = build_model(replace(cfg, vocab_size=128))
+        with pytest.raises(ValueError, match="vocab"):
+            ServeEngine(model, params, slots=2, max_len=64,
+                        draft_model=dmodel, draft_params=None)
+
+    def test_spec_k_validated(self, tiny, drafter):
+        cfg, model, params = tiny
+        dm, dp = drafter
+        with pytest.raises(ValueError, match="spec_k"):
+            ServeEngine(model, params, slots=2, max_len=64, draft_model=dm,
+                        draft_params=dp, spec_k=0)
