@@ -466,6 +466,101 @@ def spec_decode_benches(ks=(2, 4, 8), slots=4, n_req=4, max_new=96,
     return rows, record
 
 
+def shared_prefix_benches(slots=8, sys_len=248, sfx_len=8, max_new=4,
+                          page_size=16, passes=3, target_layers=8):
+    """Warm (cached system prompt) vs cold admission at B=slots.
+
+    Every request is ``sys_prompt + fresh suffix`` — the million-user
+    shape.  The COLD arm serves it on a prefix-cache-off engine (the
+    bucketed-prefill path: every admission computes the full prompt);
+    the WARM arm runs the radix prefix cache, so after one unmeasured
+    warmup wave the system prompt's pages are resident and each
+    measured admission maps them (refcount + 1, zero compute) and
+    prefills only the ``sfx_len``-token suffix.  Both arms time
+    ``ServeEngine._admit`` over a full ``slots``-wide wave on a warm
+    (pre-compiled) engine, then drain — so the number is pure admission
+    work, and the drain's ``run()`` re-asserts the allocator leak check
+    every pass.  ``pages_allocated`` counts the fresh pages the wave
+    took: warm must be exactly slots * ceil(sfx_len / page) — the
+    acceptance bound — vs the cold arm's full bucketed prompt.
+
+    Returns (csv_rows, record); the record lands in
+    BENCH_ent_matmul.json under "shared_prefix".
+    """
+    from repro.configs import get_config, reduced_config
+    from repro.models.transformer import build_model
+    from repro.runtime.serve_loop import ServeEngine
+
+    from dataclasses import replace
+    # deep/wide enough that admission cost is prefill COMPUTE, with a
+    # high GQA ratio (8 q : 1 kv) so the page pool — which every
+    # dispatch copies once on the CPU backend, in BOTH arms — stays
+    # small next to the per-token projection/MLP work the cold arm
+    # repeats and the warm arm skips
+    cfg = replace(reduced_config(get_config("qwen2.5-3b")),
+                  num_layers=target_layers, d_model=256, num_heads=8,
+                  num_kv_heads=1, head_dim=32, d_ff=1024)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    vocab = cfg.vocab_size
+    prompt_len = sys_len + sfx_len
+    bucketed = 8
+    while bucketed < prompt_len:
+        bucketed *= 2
+    max_len = bucketed + max_new + page_size
+    rng = np.random.default_rng(0)
+    sys_prompt = rng.integers(1, vocab, sys_len).tolist()
+
+    def batch(seed):
+        r = np.random.default_rng(seed)
+        return [sys_prompt + r.integers(1, vocab, sfx_len).tolist()
+                for _ in range(slots)]
+
+    def admission(prefix):
+        eng = ServeEngine(model, params, slots=slots, max_len=max_len,
+                          page_size=page_size, prefix_cache=prefix)
+        for p in batch(999):      # compile + (warm arm) cache warmup
+            eng.submit(p, max_new_tokens=max_new)
+        eng.run()
+        times, pages = [], []
+        for i in range(passes):
+            for p in batch(i):
+                eng.submit(p, max_new_tokens=max_new)
+            t0 = time.perf_counter()
+            eng._admit()
+            times.append(time.perf_counter() - t0)
+            pages.append(sum(len(v) for v in eng._slot_pages.values()))
+            eng.run()             # drain + leak check
+        return 1e6 * min(times), pages[0], eng
+
+    cold_us, cold_pages, _ = admission(False)
+    warm_us, warm_pages, eng = admission(True)
+    ptoks = slots * prompt_len    # logical prompt tokens per wave
+    fs = eng.prefix_stats
+    record = {
+        "slots": slots, "sys_len": sys_len, "sfx_len": sfx_len,
+        "page_size": page_size, "backend": jax.default_backend(),
+        "cold": {"us_admission": round(cold_us, 1),
+                 "admission_tok_s": round(ptoks / (cold_us / 1e6), 1),
+                 "pages_allocated": cold_pages},
+        "warm": {"us_admission": round(warm_us, 1),
+                 "admission_tok_s": round(ptoks / (warm_us / 1e6), 1),
+                 "pages_allocated": warm_pages,
+                 "prefix_hit_rate": round(fs["hit_rate"], 3),
+                 "cow_copies": fs["cow_copies"]},
+        "speedup_warm_vs_cold": round(cold_us / warm_us, 3),
+    }
+    rows = [
+        (f"shared_prefix_cold_admit_b{slots}", cold_us,
+         f"cold wave: {slots} x {prompt_len}-token prompts, "
+         f"{cold_pages} pages"),
+        (f"shared_prefix_warm_admit_b{slots}", warm_us,
+         f"warm wave: {sys_len}-token prefix cached, {warm_pages} pages "
+         f"({record['speedup_warm_vs_cold']}x)"),
+    ]
+    return rows, record
+
+
 def paged_attn_benches(batch=4, heads=8, kv_heads=2, head_dim=64,
                        page_size=16, max_lens=(128, 1024), iters=40):
     """Gather-then-flash vs in-place paged decode attention, op level.
@@ -717,6 +812,11 @@ def kernel_benches(quick: bool = False):
         **({"max_new": 48} if quick else {}))
     rows += crows
     record["spec_decode"] = crecord
+    # shared-prefix admission: warm (cached system prompt) vs cold at
+    # B=8 — the canonical shape stays in --quick, only repeats shrink
+    xrows, xrecord = shared_prefix_benches(**({"passes": 1} if quick else {}))
+    rows += xrows
+    record["shared_prefix"] = xrecord
 
     with open("BENCH_ent_matmul.json", "w") as f:
         json.dump(record, f, indent=1)

@@ -60,6 +60,14 @@ def main():
                     help="verify sampler: 'match' replays the plain "
                          "engine's stream bit-for-bit; 'rejection' is "
                          "classic rejection sampling")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="radix prefix cache + copy-on-write page sharing "
+                         "on the paged engine (default: auto — on for "
+                         "paged attention-only models)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="engine: prepend a common N-token system prompt "
+                         "to every request (exercises prefix sharing)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0,
                     help="on-device sampler top-k truncation (0 = off)")
@@ -101,18 +109,24 @@ def main():
                 dparams = dmodel.init(jax.random.PRNGKey(1))
             spec_kw = {"draft_model": dmodel, "draft_params": dparams,
                        "spec_k": args.spec_k, "spec_mode": args.spec_mode}
+        max_len += args.shared_prefix
         engine = ServeEngine(model, params, slots=slots, max_len=max_len,
                              prefill_chunk=chunk, top_k=top_k, top_p=top_p,
                              cache_kind=args.cache_kind,
                              page_size=args.page_size or None,
-                             pages=args.pages or None, **spec_kw)
+                             pages=args.pages or None,
+                             prefix_cache=("auto" if args.prefix_cache is None
+                                           else args.prefix_cache), **spec_kw)
+        sys_prompt = rng.integers(0, cfg.vocab_size,
+                                  args.shared_prefix).tolist()
         lens = rng.integers(max(1, args.prompt_len // 2),
                             args.prompt_len + 1, n_req)
         t0 = time.time()
         for n in lens:
-            engine.submit(rng.integers(0, cfg.vocab_size, int(n)),
-                          max_new_tokens=args.steps,
-                          temperature=args.temperature)
+            engine.submit(
+                sys_prompt + rng.integers(0, cfg.vocab_size, int(n)).tolist(),
+                max_new_tokens=args.steps,
+                temperature=args.temperature)
         results = engine.run()
         dt = time.time() - t0
         total = sum(len(v) for v in results.values())
@@ -128,6 +142,19 @@ def main():
                   f"({0.0 if rate is None else rate:.2%}), "
                   f"{st['emitted']} emitted "
                   f"({st['emitted'] / max(st['ticks'], 1):.2f} tok/tick)")
+        if engine.page_stats is not None:
+            ps = engine.page_stats
+            print(f"pages: {ps['total']} total, {ps['free']} free, "
+                  f"{ps['resident']} resident, {ps['shared']} shared, "
+                  f"{ps.get('cached', 0)} cached")
+        if engine.prefix_stats is not None:
+            fs = engine.prefix_stats
+            saved = fs["hit_tokens"] - fs["cow_copies"] * engine.page_size
+            print(f"prefix cache: {fs['hits']}/{fs['lookups']} hits "
+                  f"({fs['hit_rate']:.0%}), {fs['hit_tokens']} prompt "
+                  f"tokens reused (~{max(saved, 0)} net of CoW), "
+                  f"{fs['resident']} pages cached, {fs['evicted']} "
+                  f"evicted, {fs['cow_copies']} CoW copies")
         uid0 = min(results)
         print("sample:", results[uid0][:16])
         return

@@ -521,6 +521,20 @@ class PagedCache(KVCache):
         return replace(self, block_table=jnp.broadcast_to(
             table.astype(bt.dtype), bt.shape))
 
+    def copy_pages(self, src, dst):
+        """Copy whole pages ``src[i] -> dst[i]`` in every pool (K, V and
+        the int8 scale pools) — the device half of copy-on-write: the
+        engine copies a still-shared page to a fresh one and remaps the
+        writing slot's table BEFORE the write lands, so the other
+        holders' bytes never change.  ``src``/``dst``: [n] int32 page
+        ids.  Works on both per-layer pools ([P, page, H, hd]) and the
+        engine's group-stacked leaves ([G, P, page, H, hd]) — the page
+        axis is indexed from the right."""
+        cp = lambda c: None if c is None else (
+            c.at[..., dst, :, :, :].set(c[..., src, :, :, :]))
+        return replace(self, k=cp(self.k), v=cp(self.v),
+                       k_s=cp(self.k_s), v_s=cp(self.v_s))
+
 
 @_register()
 @dataclass(frozen=True)

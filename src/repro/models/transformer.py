@@ -479,10 +479,10 @@ class Model:
         return None
 
     def prefill(self, params, cache, tokens=None, embeds=None, pad_mask=None,
-                chunk: int | None = None):
+                chunk: int | None = None, pos0: int = 0):
         """Batched serving prefill: forward pass(es) that populate the
         decode cache.  Returns (last-token logits [B, V], cache at
-        pos=S0) — exactly what the first decode step needs.
+        pos=pos0+S0) — exactly what the first decode step needs.
 
         Prompts longer than the attention cache width (a sliding-window
         ring the prompt would wrap), or any prompt when ``chunk`` /
@@ -495,15 +495,27 @@ class Model:
         until the ring wraps, and exact-math/atol-level after (the ring
         reorders the f32 reduction; same caveat on TPU, where prefill
         runs the Pallas kernel).
+
+        ``pos0 > 0`` RESUMES a prompt: the tokens are positions
+        [pos0, pos0+S0) on top of a cache already holding [0, pos0) —
+        the prefix-sharing suffix prefill (a prefix-cached admission
+        maps the shared pages and prefills only from the first unshared
+        position).  The cache must sit at ``pos == pos0``.  Resumed
+        prompts are unpadded (``pad_mask`` is rejected: padding offsets
+        are a whole-prompt-at-start-0 notion).
         """
         x = tokens if tokens is not None else embeds
         s0 = x.shape[1]
+        if pos0 and pad_mask is not None:
+            raise ValueError(
+                "pos0 > 0 resumes an unpadded prompt at start 0; pad_mask "
+                "is unsupported on the resumed-suffix path")
         chunk = chunk if chunk is not None else self.cfg.prefill_chunk
         width = self._attn_cache_width(cache)
-        if chunk is None and (width is None or s0 <= width):
+        if chunk is None and (width is None or pos0 + s0 <= width):
             out = self.apply(params, tokens=tokens, embeds=embeds, cache=cache,
                              write_cache=True, last_only=True,
-                             pad_mask=pad_mask)
+                             pad_mask=pad_mask, pos0=pos0)
             return out["logits"][:, 0], out["cache"]
 
         c = chunk or width          # auto-chunk at the ring width
@@ -522,7 +534,7 @@ class Model:
                 embeds=None if embeds is None else embeds[:, lo:hi],
                 cache=cache, write_cache=True, last_only=True,
                 pad_mask=None if pad_mask is None else pad_mask[:, lo:hi],
-                pos0=lo, start=start, need_logits=(hi == s0))
+                pos0=pos0 + lo, start=start, need_logits=(hi == s0))
             cache = out["cache"]
             if hi == s0:
                 logits = out["logits"][:, 0]

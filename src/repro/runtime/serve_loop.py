@@ -24,6 +24,13 @@ Three layers, bottom-up:
   in-kernel, null pages compute-skipped), so a tick never materializes
   the gathered [slots, max_len] KV view (the admission prefill's
   pages-covering-prefix gather only runs for chunked prompts).
+  Page LIFETIME lives in ``repro.runtime.page_allocator.PageAllocator``
+  (per-page refcounts, double-free/leak detection) and prompt KV is
+  SHARED across requests through ``repro.runtime.prefix_cache``: a
+  radix trie over page-sized token blocks maps a newcomer's longest
+  cached prompt prefix straight into its block table, so admission
+  prefills only the unshared suffix — O(new tokens), not O(prompt) —
+  with copy-on-write protecting shared pages from divergent writes.
   Sliding-window models serve through the RING backend (absolute
   per-slot positions over a window-sized ring, prompts longer than the
   window included).
@@ -51,6 +58,8 @@ import numpy as np
 from repro.models import kv_cache
 from repro.models.transformer import Model
 from repro.runtime import sampling
+from repro.runtime.page_allocator import PageAllocator
+from repro.runtime.prefix_cache import PrefixCache
 
 
 def make_prefill_step(model: Model):
@@ -237,17 +246,46 @@ class ServeEngine:
     * "paged" — fixed-size pages + per-slot block tables over a shared
       pool.  Admission reserves the request's worst case
       (ceil((prompt + max_new_tokens) / page) pages), maps the prompt's
-      pages from a host free list, and prefills straight through the
+      pages from the refcounted host allocator
+      (``repro.runtime.page_allocator.PageAllocator`` — ALL page
+      lifetime flows through it), and prefills straight through the
       pool, so admitting a request moves page INDICES, never [max_len]
       cache rows; the decode tick reads the pages in place through the
       paged-attention kernel (no gathered KV view — a freshly admitted
       slot's unmapped tail and a freed slot's all-null table row are
       masked/compute-skipped in-kernel), maps one reserved page at a
-      time as a slot crosses a page boundary, and EOS returns the
-      slot's pages to the pool.  ``pages`` caps the pool (default: full
-      provisioning, slots * ceil(max_len / page_size)) — an undersized
-      pool admission-stalls instead of failing, and in-flight requests
-      can never run out of pages.
+      time as a slot crosses a page boundary, and EOS releases the
+      slot's page references (exclusive pages return to the pool).
+      ``pages`` caps the pool (default: full provisioning, slots *
+      ceil(max_len / page_size)) — an undersized pool admission-stalls
+      instead of failing, and in-flight requests can never run out of
+      pages.
+
+    PREFIX SHARING (``prefix_cache``, default "auto" = on for paged
+    attention-only models): full-page prompt prefixes are cached in a
+    radix trie (``repro.runtime.prefix_cache.PrefixCache``) keyed on
+    page-sized token blocks and pinned with allocator refcounts.  A
+    newcomer whose prompt starts with a cached prefix maps the SHARED
+    pages into its block table (refcount + 1 each, zero KV compute,
+    zero new pages) and prefills only the unshared suffix, resuming the
+    chunked prefill at the first unshared position — admission cost is
+    O(new tokens), and N requests sharing a system prompt hold ONE copy
+    of its KV.  To keep shared pages byte-identical across holders,
+    prefix-cached admission prefills UNPADDED at start 0 (positions —
+    and hence RoPE rotations — line up for every request; the ragged
+    parity tests pin unpadded == padded emissions, so streams stay
+    bit-identical to the bucketed path), and every write is gated by
+    COPY-ON-WRITE: before a prefill/decode/verify write lands in a page
+    some other holder still references, the engine copies the page to a
+    fresh one (``PagedCache.copy_pages``, one device dispatch) and
+    remaps this slot's table — other holders' bytes never change.
+    Cached pages idle at refcount 1 and are LRU-evicted only under pool
+    pressure, so a warm cache never steals capacity from admission.
+    On drain, ``run()`` asserts the allocator leak check: refcounts ==
+    block-table occupancy + cache pins, and free + resident pages tile
+    the pool exactly.  SSM/hybrid models can't share (the post-prefix
+    recurrent state isn't paged): "auto" resolves to off and an
+    explicit ``prefix_cache=True`` raises.
     * "ring" — sliding-window decode: slots still track ABSOLUTE
       positions while rows live in a ``window``-slot ring, so prompts
       longer than the window are servable end to end (admission chunks
@@ -293,7 +331,8 @@ class ServeEngine:
                  cache_kind: str | None = None, page_size: int | None = None,
                  pages: int | None = None, draft_model: Model | None = None,
                  draft_params=None, spec_k: int = 4,
-                 spec_mode: str = "match"):
+                 spec_mode: str = "match",
+                 prefix_cache: bool | str = "auto"):
         if slots < 1:
             raise ValueError(f"ServeEngine needs at least one slot, got {slots}")
         if cache_kind in (None, "auto"):
@@ -312,19 +351,39 @@ class ServeEngine:
             cache = model.init_cache(slots, max_len, kind="paged",
                                      page_size=self.page_size,
                                      pages=self._npages, mapped=False)
-            # host-side page allocator: free list + per-slot page sets +
-            # a block-table mirror, so ticks never sync on the device.
-            # Admission RESERVES each request's worst case (prompt +
-            # max_new_tokens) but maps pages lazily at page boundaries:
-            # mid-decode grabs always draw from the slot's own
-            # reservation, so an undersized pool can only ever stall
-            # admission — never fail a request in flight.
-            self._free_pages = list(range(self._npages, 0, -1))
-            self._slot_pages: dict[int, list[int]] = {}
+            # host-side page accounting: the refcounted allocator + a
+            # block-table mirror + per-slot page-reference sets, so
+            # ticks never sync on the device.  Admission RESERVES each
+            # request's worst case (prompt + max_new_tokens) but maps
+            # pages lazily at page boundaries: mid-decode grabs always
+            # draw from the slot's own reservation, so an undersized
+            # pool can only ever stall admission — never fail a request
+            # in flight.
+            self._alloc = PageAllocator(self._npages)
+            self._slot_pages: dict[int, list[int]] = {}    # exclusive refs
+            self._slot_shared: dict[int, list[int]] = {}   # prefix-shared refs
             self._slot_reserved: dict[int, int] = {}
             self._table = np.zeros((slots, self._pps), np.int32)
+            has_ssm = any(m == "ssm" for m, _ in model.cfg.group)
+            if prefix_cache == "auto":
+                prefix_cache = not has_ssm
+            if prefix_cache and has_ssm:
+                raise ValueError(
+                    "prefix caching shares attention KV pages only; SSM "
+                    "layers carry recurrent state the cache cannot resume "
+                    "from — serve hybrid/SSM models with "
+                    "prefix_cache=False")
+            self._prefix = (PrefixCache(self.page_size, self._alloc)
+                            if prefix_cache else None)
         else:
+            if prefix_cache is True:
+                raise ValueError(
+                    f"prefix caching requires the paged backend, not "
+                    f"{cache_kind!r}: only block tables can map one page "
+                    "into many slots")
+            self._prefix = None
             cache = model.init_cache(slots, max_len, kind=cache_kind)
+        self._cow_copies = 0
         cache["pos"] = jnp.zeros((slots,), jnp.int32)
         cache["start"] = jnp.zeros((slots,), jnp.int32)
         self.cache = cache
@@ -354,6 +413,20 @@ class ServeEngine:
 
         # jit's own shape-keyed cache compiles once per length bucket
         self._prefill = jax.jit(_prefill_into)
+
+        def _prefill_from(params, toks, layers, pos0):
+            # prefix-shared admission: resume the prompt at its first
+            # unshared position on top of the mapped shared pages
+            c = {"layers": layers, "pos": jnp.full((), pos0, jnp.int32)}
+            return model.prefill(params, c, tokens=toks,
+                                 chunk=prefill_chunk, pos0=pos0)
+
+        self._prefill_from = jax.jit(_prefill_from, static_argnums=(3,))
+        # device half of copy-on-write: duplicate whole pages src -> dst
+        # across every paged layer pool in one dispatch
+        self._copy_pages = jax.jit(lambda layers, src, dst: tuple(
+            c.copy_pages(src, dst) if isinstance(c, kv_cache.PagedCache)
+            else c for c in layers))
         self._sampler = sampling.make_sampler(top_k, top_p, pad_id)
         self._truncates = top_k is not None or top_p is not None
         self._argmax = jax.jit(
@@ -452,13 +525,18 @@ class ServeEngine:
         tokens = [int(t) for t in np.asarray(tokens).reshape(-1)]
         if not tokens:
             raise ValueError("cannot serve an empty prompt")
-        if _bucket(len(tokens), self.prefill_bucket) + max_new_tokens > self.max_len:
+        # prefix-cached admission is unpadded (no bucket), so the exact
+        # length is the capacity bound
+        sp = (len(tokens) if self._prefix is not None
+              else _bucket(len(tokens), self.prefill_bucket))
+        if sp + max_new_tokens > self.max_len:
             raise ValueError(
-                f"prompt ({len(tokens)} tokens, bucketed) + max_new_tokens "
-                f"({max_new_tokens}) exceeds engine max_len {self.max_len}")
+                f"prompt ({len(tokens)} tokens"
+                f"{'' if self._prefix is not None else ', bucketed'}) + "
+                f"max_new_tokens ({max_new_tokens}) exceeds engine max_len "
+                f"{self.max_len}")
         if self.cache_kind == "paged":
-            need = self._pages_needed(
-                _bucket(len(tokens), self.prefill_bucket), max_new_tokens)
+            need = self._pages_needed(sp, max_new_tokens)
             if need > self._npages:
                 raise ValueError(
                     f"request needs {need} pages worst-case but the pool "
@@ -490,8 +568,14 @@ class ServeEngine:
                 self._dcache["pos"] = self._dcache["pos"].at[slot].set(0)
                 self._dcache["start"] = (
                     self._dcache["start"].at[slot].set(0))
-            if self.cache_kind == "paged":   # pages go back to the pool
-                self._free_pages.extend(self._slot_pages.pop(slot, ()))
+            if self.cache_kind == "paged":
+                # drop every page reference the slot holds: exclusive
+                # pages free immediately; prefix-shared pages just lose
+                # one holder (the cache's pin keeps them resident)
+                for pid in self._slot_pages.pop(slot, ()):
+                    self._alloc.release(pid)
+                for pid in self._slot_shared.pop(slot, ()):
+                    self._alloc.release(pid)
                 self._slot_reserved.pop(slot, None)
                 self._table[slot] = 0
                 self.cache["layers"] = self._release(
@@ -513,21 +597,94 @@ class ServeEngine:
     @property
     def page_stats(self) -> dict | None:
         """Pool accounting for the paged backend (None otherwise):
-        {total, free (unmapped), reserved (worst-case holds)}."""
+        {total, free (unmapped), shared (refcount > 1), resident
+        (refcount >= 1), reserved (worst-case holds), cached
+        (prefix-cache pins, when enabled)}."""
         if self.cache_kind != "paged":
             return None
-        return {"total": self._npages, "free": len(self._free_pages),
-                "reserved": sum(self._slot_reserved.values())}
+        stats = self._alloc.stats()
+        stats["reserved"] = sum(self._slot_reserved.values())
+        if self._prefix is not None:
+            stats["cached"] = self._prefix.resident
+        return stats
+
+    @property
+    def prefix_stats(self) -> dict | None:
+        """Prefix-cache counters + the engine's CoW copy count (None
+        when prefix caching is off)."""
+        if self._prefix is None:
+            return None
+        stats = self._prefix.stats()
+        stats["cow_copies"] = self._cow_copies
+        return stats
+
+    def _pages_available(self) -> int:
+        """Pages a NEW reservation may count on: free pages, plus
+        cached pages nobody maps (evictable under pressure), minus the
+        lazily-mapped remainder of every live reservation."""
+        evictable = self._prefix.evictable if self._prefix is not None else 0
+        outstanding = sum(
+            reserved - len(self._slot_pages.get(slot, ()))
+            for slot, reserved in self._slot_reserved.items())
+        return self._alloc.free + evictable - outstanding
+
+    def _take_pages(self, n: int) -> list[int]:
+        """Allocate ``n`` exclusive pages, evicting idle prefix-cache
+        entries to cover a shortfall.  Exhaustion here means the
+        reservation accounting is broken — admission guarantees every
+        live request's worst case."""
+        if n <= 0:
+            return []
+        short = n - self._alloc.free
+        if short > 0 and self._prefix is not None:
+            self._prefix.evict(short)
+        try:
+            return self._alloc.alloc(n)
+        except RuntimeError as e:
+            raise RuntimeError(
+                "page reservation accounting is broken: pool exhausted "
+                "under a live reservation") from e
+
+    def _cow(self, slot: int, lo: int, hi: int) -> bool:
+        """Copy-on-write gate for ``slot`` writing positions [lo, hi]:
+        any mapped page in that range still shared with another holder
+        (refcount > 1) is copied to a fresh page and the slot's table
+        remapped BEFORE the write, so the other holders' bytes never
+        change.  Returns True when the table mirror changed (caller
+        pushes it with the rest of the tick's table updates)."""
+        src, dst = [], []
+        for pp in range(lo // self.page_size, hi // self.page_size + 1):
+            pid = int(self._table[slot, pp])
+            if pid == 0 or self._alloc.refcount(pid) <= 1:
+                continue
+            new = self._take_pages(1)[0]
+            src.append(pid)
+            dst.append(new)
+            self._table[slot, pp] = new
+            self._slot_pages[slot].append(new)
+            # drop this slot's hold on the shared original (the other
+            # holders — cache pin, sibling slots — keep it alive)
+            if pid in self._slot_shared.get(slot, ()):
+                self._slot_shared[slot].remove(pid)
+            else:
+                self._slot_pages[slot].remove(pid)
+            self._alloc.release(pid)
+        if src:
+            self._cow_copies += len(src)
+            self.cache["layers"] = self._copy_pages(
+                self.cache["layers"],
+                jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32))
+        return bool(src)
 
     def _alloc_pages(self, slot: int, need: int, reserve: int) -> bool:
         """Reserve ``reserve`` pages for the request's lifetime and map
         the first ``need`` (the prompt) onto ``slot``'s block-table
-        prefix; False when the unreserved pool can't cover the
-        reservation (admission waits for an EOS)."""
-        if self._npages - sum(self._slot_reserved.values()) < reserve:
+        prefix; False when the pool can't cover the reservation
+        (admission waits for an EOS)."""
+        if self._pages_available() < reserve:
             return False
         self._slot_reserved[slot] = reserve
-        pids = [self._free_pages.pop() for _ in range(need)]
+        pids = self._take_pages(need)
         self._slot_pages[slot] = pids
         self._table[slot] = 0
         self._table[slot, :need] = pids
@@ -535,18 +692,70 @@ class ServeEngine:
             self.cache["layers"], jnp.asarray(self._table))
         return True
 
-    def _admit(self):
-        while self._queue and self._free:
-            req = self._queue[0]
-            slot = self._free[-1]
-            n = len(req.tokens)
+    def _map_prefix(self, slot: int, req: Request) -> int | None:
+        """Prefix-cached page mapping for ``req``: walk the radix cache,
+        map the shared prefix pages into ``slot``'s block table
+        (refcount + 1 each), allocate fresh pages for the unshared rest
+        of the prompt, and run the CoW gate over the suffix-prefill
+        write range.  Returns the resume position ``pos0`` (first
+        position the prefill must compute), or None when the pool can't
+        cover the reservation (admission stalls)."""
+        n, ps = len(req.tokens), self.page_size
+        matched, spids = self._prefix.match(req.tokens)
+        # a fully cached prompt still recomputes its LAST token: the
+        # admission sample needs the last-position logits (that single
+        # in-place write is what triggers CoW on the final shared page)
+        pos0 = min(matched, n - 1)
+        reserve = (self._pages_needed(n, req.max_new_tokens)
+                   - pos0 // ps)
+        if self._pages_available() < reserve:
+            return None
+        for pid in spids:
+            self._alloc.share(pid)
+        self._slot_shared[slot] = list(spids)
+        self._slot_pages[slot] = []
+        self._slot_reserved[slot] = reserve
+        self._table[slot] = 0
+        self._table[slot, :len(spids)] = spids
+        prompt_pages = -(-n // ps)
+        fresh = self._take_pages(prompt_pages - len(spids))
+        self._slot_pages[slot].extend(fresh)
+        self._table[slot, len(spids):prompt_pages] = fresh
+        self._cow(slot, pos0, n - 1)
+        self.cache["layers"] = self._set_tables(
+            self.cache["layers"], jnp.asarray(self._table))
+        return pos0
+
+    def _admit_one(self, slot: int, req: Request) -> bool:
+        """Admit ``req`` into ``slot``; False when the paged pool can't
+        cover its worst case yet (the caller stops admitting until an
+        EOS returns pages)."""
+        n = len(req.tokens)
+        if self._prefix is not None:
+            pos0 = self._map_prefix(slot, req)
+            if pos0 is None:
+                return False
+            # suffix-only prefill, unpadded at start 0: positions (and
+            # RoPE rotations) line up across every request sharing the
+            # prefix, so the pages are byte-shareable
+            toks = jnp.asarray([req.tokens[pos0:]], jnp.int32)
+            view = self._view(self.cache["layers"], slot)
+            logits, c1 = self._prefill_from(self.params, toks, view, pos0)
+            self.cache["layers"] = self._admit_slot(
+                self.cache["layers"], c1["layers"], slot)
+            # register the full-page prompt blocks for future sharing
+            # (already-cached blocks keep their canonical pages)
+            self._prefix.insert(
+                req.tokens,
+                [int(p) for p in self._table[slot, :n // self.page_size]])
+            dtoks, dmask, pos, start = (
+                jnp.asarray([req.tokens], jnp.int32), None, n, 0)
+        else:
             sp = _bucket(n, self.prefill_bucket)
             if self.cache_kind == "paged" and not self._alloc_pages(
                     slot, -(-sp // self.page_size),
                     self._pages_needed(sp, req.max_new_tokens)):
-                break          # pool dry: requests wait for a slot's EOS
-            self._queue.popleft()
-            self._free.pop()
+                return False
             toks = jnp.asarray([[self.pad_id] * (sp - n) + req.tokens],
                                jnp.int32)
             mask, _ = _pad_mask_from_lens([n], 1, sp)
@@ -558,28 +767,39 @@ class ServeEngine:
             logits, c1 = self._prefill(self.params, toks, mask, view)
             self.cache["layers"] = self._admit_slot(
                 self.cache["layers"], c1["layers"], slot)
-            self.cache["pos"] = self.cache["pos"].at[slot].set(sp)
-            self.cache["start"] = self.cache["start"].at[slot].set(sp - n)
-            if self._spec:   # the drafter shadows the prompt prefill
-                dview = self._view(self._dcache["layers"], slot)
-                _, d1 = self._dprefill(self.draft_params, toks, mask, dview)
-                self._dcache["layers"] = self._admit_slot(
-                    self._dcache["layers"], d1["layers"], slot)
-                self._dcache["pos"] = self._dcache["pos"].at[slot].set(sp)
-                self._dcache["start"] = (
-                    self._dcache["start"].at[slot].set(sp - n))
-            self._pos[slot] = sp
-            self._active[slot] = _SlotState(req)
-            self._temp[slot] = req.temperature
-            # per-request key: replaying a request samples the same stream
-            # regardless of which slot (or neighbours) it lands with
-            self._keys = self._keys.at[slot].set(
-                jax.random.fold_in(self._seed_key, req.uid))
-            tok, krow = self._sampler(
-                logits, self._keys[slot:slot + 1],
-                jnp.full((1,), req.temperature, jnp.float32))
-            self._keys = self._keys.at[slot].set(krow[0])
-            self._emit(slot, int(tok[0]))
+            dtoks, dmask, pos, start = toks, mask, sp, sp - n
+        self.cache["pos"] = self.cache["pos"].at[slot].set(pos)
+        self.cache["start"] = self.cache["start"].at[slot].set(start)
+        if self._spec:   # the drafter shadows the (full) prompt prefill
+            dview = self._view(self._dcache["layers"], slot)
+            _, d1 = self._dprefill(self.draft_params, dtoks, dmask, dview)
+            self._dcache["layers"] = self._admit_slot(
+                self._dcache["layers"], d1["layers"], slot)
+            self._dcache["pos"] = self._dcache["pos"].at[slot].set(pos)
+            self._dcache["start"] = (
+                self._dcache["start"].at[slot].set(start))
+        self._pos[slot] = pos
+        self._active[slot] = _SlotState(req)
+        self._temp[slot] = req.temperature
+        # per-request key: replaying a request samples the same stream
+        # regardless of which slot (or neighbours) it lands with
+        self._keys = self._keys.at[slot].set(
+            jax.random.fold_in(self._seed_key, req.uid))
+        tok, krow = self._sampler(
+            logits, self._keys[slot:slot + 1],
+            jnp.full((1,), req.temperature, jnp.float32))
+        self._keys = self._keys.at[slot].set(krow[0])
+        self._emit(slot, int(tok[0]))
+        return True
+
+    def _admit(self):
+        while self._queue and self._free:
+            req = self._queue[0]
+            slot = self._free[-1]
+            if not self._admit_one(slot, req):
+                break          # pool dry: requests wait for a slot's EOS
+            self._queue.popleft()
+            self._free.remove(slot)
 
     # .. driving ..
     def step(self) -> bool:
@@ -598,19 +818,23 @@ class ServeEngine:
             # slots writing their next token past a page boundary each
             # grab one page from their reservation (positions are
             # host-mirrored, so this never syncs on the device); all the
-            # boundary crossings of a tick push as ONE table dispatch
+            # boundary crossings of a tick push as ONE table dispatch.
+            # Writes into a still-shared page go through the CoW gate
+            # first — the token write must never touch another holder's
+            # bytes.
             dirty = False
             for slot in self._active:
-                pp = int(self._pos[slot]) // self.page_size
+                p = int(self._pos[slot])
+                pp = p // self.page_size
                 if self._table[slot, pp] == 0:
-                    if not self._free_pages:   # unreachable: admission
-                        raise RuntimeError(    # reserves the worst case
-                            "page reservation accounting is broken: pool "
-                            "exhausted mid-decode")
-                    pid = self._free_pages.pop()
+                    pid = self._take_pages(1)[0]
                     self._slot_pages[slot].append(pid)
                     self._table[slot, pp] = pid
                     dirty = True
+                elif (self._prefix is not None
+                      and self._alloc.refcount(
+                          int(self._table[slot, pp])) > 1):
+                    dirty |= self._cow(slot, p, p)
             if dirty:
                 self.cache["layers"] = self._set_tables(
                     self.cache["layers"], jnp.asarray(self._table))
@@ -642,21 +866,22 @@ class ServeEngine:
         if self.cache_kind == "paged":
             # map every page the burst can touch up front (from each
             # slot's reservation): the verify write must never land on
-            # an unmapped (null) page
+            # an unmapped (null) page — and, with prefix sharing, never
+            # on a page another holder still references (a rolled-back
+            # burst would scribble on the shared prompt), so the whole
+            # burst range runs through the CoW gate
             dirty = False
             for slot in active:
                 p = int(self._pos[slot])
                 for pp in range(p // self.page_size,
                                 (p + tick_k) // self.page_size + 1):
                     if self._table[slot, pp] == 0:
-                        if not self._free_pages:
-                            raise RuntimeError(
-                                "page reservation accounting is broken: "
-                                "pool exhausted mid-decode")
-                        pid = self._free_pages.pop()
+                        pid = self._take_pages(1)[0]
                         self._slot_pages[slot].append(pid)
                         self._table[slot, pp] = pid
                         dirty = True
+                if self._prefix is not None:
+                    dirty |= self._cow(slot, p, p + tick_k)
             if dirty:
                 self.cache["layers"] = self._set_tables(
                     self.cache["layers"], jnp.asarray(self._table))
@@ -711,8 +936,27 @@ class ServeEngine:
         d = self.spec_stats["drafted"]
         return None if d == 0 else self.spec_stats["accepted"] / d
 
+    def check_leaks(self) -> None:
+        """Allocator leak check (no-op for row backends): every page's
+        refcount must equal its observable holder count — block-table
+        occurrences across slots plus the prefix cache's pins — and the
+        free list + resident pages must tile the pool exactly.  Raises
+        ``AssertionError`` on drift.  Valid at any tick boundary;
+        ``run()`` asserts it after every drain."""
+        if self.cache_kind != "paged":
+            return
+        occupancy: dict[int, int] = {}
+        for pid in self._table.reshape(-1).tolist():
+            if pid:
+                occupancy[pid] = occupancy.get(pid, 0) + 1
+        if self._prefix is not None:
+            for pid in self._prefix.pages():
+                occupancy[pid] = occupancy.get(pid, 0) + 1
+        self._alloc.check(occupancy)
+
     def run(self) -> dict[int, list[int]]:
         """Drive until queue and slots drain; returns {uid: emitted tokens}."""
         while self.step():
             pass
+        self.check_leaks()
         return dict(self._results)

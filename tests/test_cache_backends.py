@@ -365,9 +365,14 @@ class TestServeEnginePaged:
         res = eng.run()
         assert set(res) == set(uids)
         assert all(len(res[u]) == 4 for u in uids)
-        assert eng.page_stats == {"total": 3, "free": 3, "reserved": 0}
-        assert not eng._slot_pages
+        stats = eng.page_stats
+        assert stats["total"] == 3 and stats["reserved"] == 0
+        # drained slots hold nothing; only prefix-cache pins may remain
+        assert stats["free"] + stats["resident"] == stats["total"]
+        assert stats["resident"] == stats["cached"]
+        assert not eng._slot_pages and not eng._slot_shared
         assert (eng._table == 0).all()
+        eng.check_leaks()
 
     def test_reservation_covers_decode_worst_case(self, tiny):
         """A pool that can only hold one request's worst case at a time
@@ -380,7 +385,11 @@ class TestServeEnginePaged:
                 for _ in range(2)]   # 16-bucket + 20 new -> 5 pages each
         res = eng.run()
         assert all(len(res[u]) == 20 for u in uids)
-        assert eng.page_stats == {"total": 5, "free": 5, "reserved": 0}
+        stats = eng.page_stats
+        assert stats["total"] == 5 and stats["reserved"] == 0
+        assert stats["free"] + stats["resident"] == stats["total"]
+        assert stats["resident"] == stats["cached"]
+        eng.check_leaks()
 
     def test_unservable_max_new_rejected_up_front(self, tiny):
         """max_new_tokens counts toward the worst-case page need: a

@@ -1,0 +1,200 @@
+"""Refcounted page allocator + radix prefix cache: host-side unit tests.
+
+Pure-host coverage of ``repro.runtime.page_allocator`` (alloc/share/
+release lifecycle, double-free and leak detection, the ``check``
+invariant) and ``repro.runtime.prefix_cache`` (radix match/insert over
+page-sized blocks, refcount pinning, LRU leaf-first eviction), plus a
+hypothesis property test driving random op interleavings against a
+brute-force reference.  The engine-level integration (CoW bit-identity,
+shared-prefix serving) lives in tests/test_prefix_cache.py.
+"""
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.runtime.page_allocator import PageAllocator
+from repro.runtime.prefix_cache import PrefixCache
+
+
+class TestPageAllocator:
+    def test_alloc_release_roundtrip(self):
+        a = PageAllocator(4)
+        pids = a.alloc(3)
+        assert sorted(pids) == [1, 2, 3] and a.free == 1
+        assert all(a.refcount(p) == 1 for p in pids)
+        for p in pids:
+            a.release(p)
+        assert a.free == 4
+        assert a.stats() == {"total": 4, "free": 4, "shared": 0,
+                             "resident": 0}
+
+    def test_share_release_frees_at_zero(self):
+        a = PageAllocator(2)
+        (pid,) = a.alloc(1)
+        a.share(pid)
+        a.share(pid)
+        assert a.refcount(pid) == 3
+        assert a.stats()["shared"] == 1
+        a.release(pid)
+        a.release(pid)
+        assert a.refcount(pid) == 1 and a.free == 1   # still resident
+        a.release(pid)
+        assert a.refcount(pid) == 0 and a.free == 2
+
+    def test_double_free_raises(self):
+        a = PageAllocator(2)
+        (pid,) = a.alloc(1)
+        a.release(pid)
+        with pytest.raises(ValueError, match="double free"):
+            a.release(pid)
+
+    def test_unknown_release_raises(self):
+        a = PageAllocator(2)
+        with pytest.raises(ValueError, match="double free"):
+            a.release(1)
+
+    def test_share_unmapped_raises(self):
+        a = PageAllocator(2)
+        with pytest.raises(ValueError, match="unmapped"):
+            a.share(1)
+
+    def test_exhaustion_raises(self):
+        a = PageAllocator(2)
+        a.alloc(2)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            a.alloc(1)
+
+    def test_page_zero_never_allocated(self):
+        a = PageAllocator(8)
+        assert 0 not in a.alloc(8)
+
+    def test_check_passes_on_consistent_state(self):
+        a = PageAllocator(4)
+        p1, p2 = a.alloc(2)
+        a.share(p1)
+        a.check({p1: 2, p2: 1})
+
+    def test_check_catches_refcount_drift(self):
+        a = PageAllocator(4)
+        p1, _ = a.alloc(2)
+        a.share(p1)
+        with pytest.raises(AssertionError, match="drift"):
+            a.check({p1: 1})      # observer sees one holder, allocator two
+
+    def test_check_catches_phantom_occupancy(self):
+        a = PageAllocator(4)
+        a.alloc(1)
+        with pytest.raises(AssertionError, match="drift"):
+            a.check({1: 1, 2: 1})   # page 2 mapped nowhere
+
+
+class TestPrefixCacheRadix:
+    def _cache(self, total=16, ps=4):
+        a = PageAllocator(total)
+        return a, PrefixCache(ps, a)
+
+    def test_miss_then_hit(self):
+        a, c = self._cache()
+        toks = list(range(10, 19))           # 9 tokens -> 2 full blocks
+        assert c.match(toks) == (0, [])
+        pids = a.alloc(2)
+        c.insert(toks, pids)
+        assert all(a.refcount(p) == 2 for p in pids)   # slot + pin
+        m, got = c.match(toks)
+        assert (m, got) == (8, pids)
+        # a diverging second block matches only the first
+        m, got = c.match(toks[:4] + [99] * 5)
+        assert (m, got) == (4, pids[:1])
+
+    def test_partial_block_never_cached(self):
+        a, c = self._cache()
+        pids = a.alloc(1)
+        c.insert([1, 2, 3], pids)            # shorter than one page
+        assert c.resident == 0
+        assert c.match([1, 2, 3]) == (0, [])
+
+    def test_insert_needs_page_per_block(self):
+        a, c = self._cache()
+        with pytest.raises(ValueError, match="page id per full block"):
+            c.insert(list(range(8)), a.alloc(1))
+
+    def test_reinsert_touches_not_duplicates(self):
+        a, c = self._cache()
+        toks = list(range(8))
+        pids = a.alloc(2)
+        assert c.insert(toks, pids) == 2
+        other = a.alloc(2)                   # a second holder's copy
+        assert c.insert(toks, other) == 0    # canonical pages win
+        assert c.resident == 2
+
+    def test_lru_eviction_leaf_first(self):
+        a, c = self._cache(total=8)
+        c.insert(list(range(8)), a.alloc(2))         # chain A: 2 nodes
+        c.insert(list(range(100, 104)), a.alloc(1))  # chain B: 1 node
+        for p in range(1, 4):                        # cache is sole holder
+            a.release(p)
+        c.match(list(range(8)))                      # touch A
+        assert c.evict(1) == 1                       # LRU leaf = chain B
+        assert c.match(list(range(100, 104)))[0] == 0
+        assert c.match(list(range(8)))[0] == 8
+        # cascades: A's leaf frees before its root
+        assert c.evict(2) == 2
+        assert c.resident == 0 and a.free == 8
+
+    def test_pinned_pages_never_evicted(self):
+        a, c = self._cache(total=4)
+        pids = a.alloc(2)
+        c.insert(list(range(8)), pids)       # refcount 2: slot + pin
+        assert c.evictable == 0
+        assert c.evict(2) == 0
+        assert c.resident == 2
+        for p in pids:                       # slot lets go -> evictable
+            a.release(p)
+        assert c.evictable == 2
+        assert c.evict(2) == 2 and a.free == 4
+
+    def test_stats_counters(self):
+        a, c = self._cache()
+        c.match([1, 2, 3, 4])
+        c.insert([1, 2, 3, 4], a.alloc(1))
+        c.match([1, 2, 3, 4])
+        s = c.stats()
+        assert s["lookups"] == 2 and s["hits"] == 1
+        assert s["hit_tokens"] == 4 and s["inserted"] == 1
+        assert s["hit_rate"] == 0.5
+
+
+class TestAllocatorProperty:
+    @given(st.data())
+    @settings(max_examples=200, deadline=None)
+    def test_random_ops_match_reference(self, data):
+        """Random alloc/share/release interleavings: the allocator must
+        agree with a brute-force reference refcount map at every step,
+        and ``check`` must pass against it."""
+        total = data.draw(st.integers(1, 12))
+        a = PageAllocator(total)
+        refs: dict[int, int] = {}
+        for _ in range(data.draw(st.integers(0, 40))):
+            op = data.draw(st.sampled_from(["alloc", "share", "release"]))
+            if op == "alloc":
+                n = data.draw(st.integers(0, 3))
+                if n > a.free:
+                    with pytest.raises(RuntimeError):
+                        a.alloc(n)
+                else:
+                    for pid in a.alloc(n):
+                        assert pid not in refs
+                        refs[pid] = 1
+            elif op == "share" and refs:
+                pid = data.draw(st.sampled_from(sorted(refs)))
+                a.share(pid)
+                refs[pid] += 1
+            elif op == "release" and refs:
+                pid = data.draw(st.sampled_from(sorted(refs)))
+                a.release(pid)
+                refs[pid] -= 1
+                if not refs[pid]:
+                    del refs[pid]
+            assert {p: a.refcount(p) for p in refs} == refs
+            assert a.free == total - len(refs)
+            a.check(refs)

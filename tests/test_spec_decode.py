@@ -253,12 +253,18 @@ class TestSpecEngineBitIdentity:
 
 class TestSpecEngineGuards:
     def test_page_pool_drains_clean(self, tiny, drafter):
+        """After drain every page is either free or a prefix-cache pin
+        (full prompt pages stay resident for future sharing); no slot
+        holds a reference and no table entry survives."""
         cfg, model, params = tiny
         _, eng = _serve(model, params, spec=_spec(drafter), page_size=4)
         stats = eng.page_stats
-        assert stats["free"] == stats["total"] and stats["reserved"] == 0
-        assert not eng._slot_pages
+        assert stats["free"] + stats["resident"] == stats["total"]
+        assert stats["reserved"] == 0
+        assert stats["resident"] == stats["cached"]   # only cache pins left
+        assert not eng._slot_pages and not eng._slot_shared
         assert (eng._table == 0).all()
+        eng.check_leaks()
 
     def test_ring_target_rejected(self, tiny):
         wcfg = reduced_config(get_config("mixtral-8x7b"))
