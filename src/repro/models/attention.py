@@ -248,9 +248,16 @@ def verify_step(cfg: ModelConfig, p, x, cache, pos, start=None):
     return _finish(cfg, p, out), new
 
 
-def prefill_step(cfg: ModelConfig, p, x, cache, start=None, pos0: int = 0):
+def prefill_step(cfg: ModelConfig, p, x, cache, start=None, pos0: int = 0,
+                 write: bool = True):
     """Prompt-chunk forward with KV cache write-through: the batched twin
     of ``decode_step``.  x: [B, S, D] -> (y [B, S, D], updated cache).
+
+    ``write=False`` runs the same math read-only: the chunk's K/V are
+    rotated/quantized and attended exactly as if they were written, but
+    the ORIGINAL cache is returned (XLA dead-code-eliminates the store).
+    Serving uses this to recover last-token logits for a fully
+    prefix-cached prompt without touching its shared pages.
 
     All S keys/values are rotated and written to slots ``pos0 .. pos0+S-1``
     (the backend wraps/pages them as its layout demands) in one shot, and
@@ -301,4 +308,4 @@ def prefill_step(cfg: ModelConfig, p, x, cache, start=None, pos0: int = 0):
         q.transpose(0, 2, 1, 3), kop.transpose(0, 2, 1, 3),
         vop.transpose(0, 2, 1, 3), start=start_local, q_offset=ctx,
         window=new.window, k_scale=_scale_op(ks), v_scale=_scale_op(vs))
-    return _finish(cfg, p, out), new
+    return _finish(cfg, p, out), (new if write else cache)

@@ -122,16 +122,24 @@ def _layer_verify(cfg: ModelConfig, spec, p, x, cache, pos, dist=None,
 
 
 def _layer_prefill(cfg: ModelConfig, spec, p, x, cache, start=None,
-                   pad_mask=None, dist=None, pos0: int = 0):
+                   pad_mask=None, dist=None, pos0: int = 0,
+                   write: bool = True):
     """Prompt-chunk layer forward that writes the decode cache through.
-    Returns (x [B, S, D], new per-layer cache at pos=pos0+S)."""
+    Returns (x [B, S, D], new per-layer cache at pos=pos0+S).
+    ``write=False`` returns the cache untouched (attention-only: an SSM
+    layer's recurrent state cannot be read around)."""
     mixer, ffn = spec
     if mixer == "attn":
         h = L.norm_apply(cfg, p["mixer_norm"], x)
         y, cache = attention.prefill_step(cfg, p["mixer"], h, cache,
-                                          start=start, pos0=pos0)
+                                          start=start, pos0=pos0,
+                                          write=write)
         x = x + y
     elif mixer == "ssm":
+        if not write:
+            raise ValueError(
+                "peek prefill is attention-only: an SSM layer must write "
+                "its recurrent state through")
         h = L.norm_apply(cfg, p["mixer_norm"], x)
         y, cache = ssm.prefill_step(cfg, p["mixer"], h, cache, mask=pad_mask)
         x = x + y
@@ -195,7 +203,8 @@ class Model:
               remat: str = "none", last_only: bool = False,
               fused_loss: bool = False, cache=None, write_cache: bool = False,
               pad_mask=None, pos0: int = 0, start=None,
-              need_logits: bool = True):
+              need_logits: bool = True, peek: bool = False,
+              last_index=None):
         """Full-sequence forward.
 
         ``write_cache=True`` turns this into the batched serving prefill:
@@ -216,6 +225,16 @@ class Model:
         overrides the pad count derived from ``pad_mask`` — required for
         chunks past the first, where the mask slice no longer sees the
         row's left pads.
+
+        ``peek=True`` (write_cache path, attention-only) runs the chunk
+        read-only: logits are exactly what a writing prefill would
+        produce, but the cache comes back untouched (``pos``
+        unadvanced) — how serving recovers last-token logits for a
+        fully prefix-cached prompt without copying its shared pages.
+        ``last_index`` (traced int32 scalar) selects which position's
+        logits ``last_only`` returns instead of the literal last row —
+        tail-padded prompts gather the last REAL token's logits with
+        the pad length traced, not baked into the compile key.
         """
         cfg = self.cfg
         if write_cache and cache is None:
@@ -252,7 +271,8 @@ class Model:
                 new_caches = []
                 for i, spec in enumerate(cfg.group):
                     x, c = _layer_prefill(cfg, spec, gparams[i], x, gcache[i],
-                                          start, pad_mask, self.dist, pos0)
+                                          start, pad_mask, self.dist, pos0,
+                                          write=not peek)
                     new_caches.append(c)
                 full_cache = jax.tree.map(
                     lambda full, new: jax.lax.dynamic_update_index_in_dim(
@@ -266,7 +286,7 @@ class Model:
             auxes = jnp.zeros((1,), jnp.float32)
             new_cache = dict(cache)
             new_cache["layers"] = new_layers
-            new_cache["pos"] = cache["pos"] + s
+            new_cache["pos"] = cache["pos"] + (0 if peek else s)
             if start is not None:
                 new_cache["start"] = start.astype(jnp.int32)
         else:
@@ -293,7 +313,11 @@ class Model:
         if not need_logits:   # non-final prefill chunk: cache only, no
             return out        # final norm / vocab projection
         if last_only:   # prefill serving: only the last position's logits
-            x = x[:, -1:, :]
+            if last_index is None:
+                x = x[:, -1:, :]
+            else:       # tail-padded prompt: the last REAL position's
+                x = jax.lax.dynamic_slice_in_dim(
+                    x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
         x = L.norm_apply(cfg, params["final_norm"], x)
         head = params.get("lm_head")
         if fused_loss:

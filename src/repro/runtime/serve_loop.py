@@ -270,15 +270,26 @@ class ServeEngine:
     zero new pages) and prefills only the unshared suffix, resuming the
     chunked prefill at the first unshared position — admission cost is
     O(new tokens), and N requests sharing a system prompt hold ONE copy
-    of its KV.  To keep shared pages byte-identical across holders,
-    prefix-cached admission prefills UNPADDED at start 0 (positions —
-    and hence RoPE rotations — line up for every request; the ragged
-    parity tests pin unpadded == padded emissions, so streams stay
-    bit-identical to the bucketed path), and every write is gated by
-    COPY-ON-WRITE: before a prefill/decode/verify write lands in a page
-    some other holder still references, the engine copies the page to a
-    fresh one (``PagedCache.copy_pages``, one device dispatch) and
-    remaps this slot's table — other holders' bytes never change.
+    of its KV.  A FULLY cached prompt admits with a read-only peek of
+    its last token's logits (``Model.apply(peek=True)``): zero fresh
+    pages, zero copies — the thundering-herd case costs one forward of
+    one token.  To keep shared pages byte-identical across holders,
+    prefix-cached admission prefills at start 0 with absolute positions
+    (RoPE rotations line up for every request; the ragged parity tests
+    pin unpadded == padded emissions, so streams stay bit-identical to
+    the bucketed path); the suffix is TAIL-padded to a power-of-two
+    bucket with the real length traced, so the admission jit compiles
+    once per (suffix bucket, match depth) pair — match depths are
+    page-quantized and shared-prefix workloads reuse a handful — not
+    once per raw suffix length.  Admission counts pages it is about to
+    pin OUT of the availability check (a matched page the cache alone
+    holds stops being evictable the moment it is shared), so pool
+    pressure stalls admission instead of breaking a live reservation.
+    Every write is additionally gated by COPY-ON-WRITE: before a
+    prefill/decode/verify write lands in a page some other holder still
+    references, the engine copies the page to a fresh one
+    (``PagedCache.copy_pages``, one device dispatch) and remaps this
+    slot's table — other holders' bytes never change.
     Cached pages idle at refcount 1 and are LRU-evicted only under pool
     pressure, so a warm cache never steals capacity from admission.
     On drain, ``run()`` asserts the allocator leak check: refcounts ==
@@ -414,14 +425,50 @@ class ServeEngine:
         # jit's own shape-keyed cache compiles once per length bucket
         self._prefill = jax.jit(_prefill_into)
 
-        def _prefill_from(params, toks, layers, pos0):
+        def _suffix_prefill(params, toks, layers, pos0, nreal):
             # prefix-shared admission: resume the prompt at its first
-            # unshared position on top of the mapped shared pages
+            # unshared position on top of the mapped shared pages.  The
+            # suffix arrives TAIL-padded to a power-of-two bucket with
+            # the real length ``nreal`` traced, so jit compiles once per
+            # (bucket, match depth) pair instead of once per raw suffix
+            # length.  Pad rows write garbage KV at rows >= the prompt
+            # end — rows decode overwrites before any pos-bounded read
+            # can see them (rows past the mapped pages scatter into the
+            # compute-skipped null page) — and the last REAL token's
+            # logits are gathered at a traced index, chunk by chunk.
             c = {"layers": layers, "pos": jnp.full((), pos0, jnp.int32)}
-            return model.prefill(params, c, tokens=toks,
-                                 chunk=prefill_chunk, pos0=pos0)
+            sp = toks.shape[1]
+            step = min(prefill_chunk or sp, sp)
+            last = nreal - 1
+            logits = None
+            for lo in range(0, sp, step):
+                hi = min(lo + step, sp)
+                out = model.apply(
+                    params, tokens=jax.lax.slice_in_dim(toks, lo, hi, axis=1),
+                    cache=c, write_cache=True, last_only=True,
+                    pos0=pos0 + lo,
+                    last_index=jnp.clip(last - lo, 0, hi - lo - 1))
+                c = out["cache"]
+                chunk_logits = out["logits"][:, 0]
+                sel = (last >= lo) & (last < hi)
+                logits = chunk_logits if logits is None else jnp.where(
+                    sel, chunk_logits, logits)
+            return logits, c
 
-        self._prefill_from = jax.jit(_prefill_from, static_argnums=(3,))
+        self._prefill_suffix = jax.jit(_suffix_prefill, static_argnums=(3,))
+
+        def _peek_last(params, toks, layers, pos0):
+            # fully prefix-cached prompt: every KV row already lives in
+            # shared pages, so admission only needs the LAST token's
+            # logits — a read-only forward (no cache write, hence no
+            # fresh page and no copy-on-write)
+            c = {"layers": layers, "pos": jnp.full((), pos0, jnp.int32)}
+            out = model.apply(params, tokens=toks, cache=c,
+                              write_cache=True, peek=True, last_only=True,
+                              pos0=pos0)
+            return out["logits"][:, 0]
+
+        self._peek = jax.jit(_peek_last, static_argnums=(3,))
         # device half of copy-on-write: duplicate whole pages src -> dst
         # across every paged layer pool in one dispatch
         self._copy_pages = jax.jit(lambda layers, src, dst: tuple(
@@ -525,8 +572,8 @@ class ServeEngine:
         tokens = [int(t) for t in np.asarray(tokens).reshape(-1)]
         if not tokens:
             raise ValueError("cannot serve an empty prompt")
-        # prefix-cached admission is unpadded (no bucket), so the exact
-        # length is the capacity bound
+        # prefix-cached admission keeps absolute positions (tail pads
+        # never occupy one), so the exact length is the capacity bound
         sp = (len(tokens) if self._prefix is not None
               else _bucket(len(tokens), self.prefill_bucket))
         if sp + max_new_tokens > self.max_len:
@@ -695,20 +742,24 @@ class ServeEngine:
     def _map_prefix(self, slot: int, req: Request) -> int | None:
         """Prefix-cached page mapping for ``req``: walk the radix cache,
         map the shared prefix pages into ``slot``'s block table
-        (refcount + 1 each), allocate fresh pages for the unshared rest
-        of the prompt, and run the CoW gate over the suffix-prefill
-        write range.  Returns the resume position ``pos0`` (first
-        position the prefill must compute), or None when the pool can't
-        cover the reservation (admission stalls)."""
+        (refcount + 1 each) and allocate fresh pages for the unshared
+        rest of the prompt.  Returns the resume position ``pos0``
+        (first position the prefill must compute; ``pos0 == len(
+        tokens)`` means fully cached — admission then only peeks the
+        last token's logits, writing nothing), or None when the pool
+        can't cover the reservation (admission stalls)."""
         n, ps = len(req.tokens), self.page_size
         matched, spids = self._prefix.match(req.tokens)
-        # a fully cached prompt still recomputes its LAST token: the
-        # admission sample needs the last-position logits (that single
-        # in-place write is what triggers CoW on the final shared page)
-        pos0 = min(matched, n - 1)
         reserve = (self._pages_needed(n, req.max_new_tokens)
-                   - pos0 // ps)
-        if self._pages_available() < reserve:
+                   - len(spids))
+        # the matched pages are about to be pinned for the slot's
+        # lifetime, but _pages_available still counts any of them the
+        # cache alone holds (refcount 1) as evictable — admitting
+        # against that double count would let a later _take_pages under
+        # a live reservation find the pool empty with nothing evictable
+        # (a crash, not a stall).  Exclude them before the check.
+        locked = sum(1 for pid in spids if self._alloc.refcount(pid) == 1)
+        if self._pages_available() - locked < reserve:
             return None
         for pid in spids:
             self._alloc.share(pid)
@@ -721,10 +772,9 @@ class ServeEngine:
         fresh = self._take_pages(prompt_pages - len(spids))
         self._slot_pages[slot].extend(fresh)
         self._table[slot, len(spids):prompt_pages] = fresh
-        self._cow(slot, pos0, n - 1)
         self.cache["layers"] = self._set_tables(
             self.cache["layers"], jnp.asarray(self._table))
-        return pos0
+        return matched
 
     def _admit_one(self, slot: int, req: Request) -> bool:
         """Admit ``req`` into ``slot``; False when the paged pool can't
@@ -735,21 +785,49 @@ class ServeEngine:
             pos0 = self._map_prefix(slot, req)
             if pos0 is None:
                 return False
-            # suffix-only prefill, unpadded at start 0: positions (and
-            # RoPE rotations) line up across every request sharing the
-            # prefix, so the pages are byte-shareable
-            toks = jnp.asarray([req.tokens[pos0:]], jnp.int32)
             view = self._view(self.cache["layers"], slot)
-            logits, c1 = self._prefill_from(self.params, toks, view, pos0)
-            self.cache["layers"] = self._admit_slot(
-                self.cache["layers"], c1["layers"], slot)
+            if pos0 >= n:
+                # fully cached: read-only last-token forward — the
+                # shared pages already hold every KV row, so admission
+                # takes zero fresh pages and copies nothing (the first
+                # decode write lands past the prompt, outside the
+                # shared full pages)
+                toks = jnp.asarray([[req.tokens[-1]]], jnp.int32)
+                logits = self._peek(self.params, toks, view, n - 1)
+            else:
+                # suffix-only prefill, unpadded at start 0: positions
+                # (and RoPE rotations) line up across every request
+                # sharing the prefix, so the pages are byte-shareable.
+                # The suffix is TAIL-padded to a power-of-two bucket
+                # (real length traced) so compiles are keyed on
+                # (bucket, match depth), not every raw suffix length;
+                # pad rows land past the prompt where pos-bounded reads
+                # never look before decode overwrites them.
+                real = n - pos0
+                spb = min(_bucket(real, self.prefill_bucket),
+                          self._pps * self.page_size - pos0)
+                toks = jnp.asarray(
+                    [req.tokens[pos0:] + [self.pad_id] * (spb - real)],
+                    jnp.int32)
+                logits, c1 = self._prefill_suffix(
+                    self.params, toks, view, pos0,
+                    jnp.asarray(real, jnp.int32))
+                self.cache["layers"] = self._admit_slot(
+                    self.cache["layers"], c1["layers"], slot)
             # register the full-page prompt blocks for future sharing
             # (already-cached blocks keep their canonical pages)
             self._prefix.insert(
                 req.tokens,
                 [int(p) for p in self._table[slot, :n // self.page_size]])
+            # the drafter shadow-prefills the WHOLE prompt tail-padded
+            # to a bucket (compiles per bucket, not per length); an SSM
+            # drafter's conv window/SSD state must end on the real last
+            # token, so it stays unpadded
+            spd = (n if self._spec and self._d_has_ssm
+                   else min(_bucket(n, self.prefill_bucket), self.max_len))
             dtoks, dmask, pos, start = (
-                jnp.asarray([req.tokens], jnp.int32), None, n, 0)
+                jnp.asarray([req.tokens + [self.pad_id] * (spd - n)],
+                            jnp.int32), None, n, 0)
         else:
             sp = _bucket(n, self.prefill_bucket)
             if self.cache_kind == "paged" and not self._alloc_pages(

@@ -87,16 +87,17 @@ class TestSharedPrefixBitIdentity:
         assert on == off
         assert eng.prefix_stats["hits"] >= 2
 
-    def test_full_match_cow_bit_identical(self, tiny):
-        """A fully cached prompt re-prefills only its LAST token — the
-        one write that lands inside a shared page and must trigger
-        copy-on-write.  Concurrent duplicates share pages live."""
+    def test_full_match_peek_bit_identical(self, tiny):
+        """A fully cached prompt admits with a READ-ONLY peek of its
+        last token's logits: no write lands anywhere, so concurrent
+        duplicates share every page live with zero CoW copies and the
+        streams stay bit-identical to unshared serving."""
         cfg, model, params = tiny
         prompts = [SYS, SYS, SYS]               # exact full-page duplicates
         on, eng = _serve(model, params, prompts, prefix=True)
         off, _ = _serve(model, params, prompts, prefix=False)
         assert on == off
-        assert eng.prefix_stats["cow_copies"] >= 2   # both followers CoW'd
+        assert eng.prefix_stats["cow_copies"] == 0   # nothing ever copied
         assert eng.prefix_stats["hits"] == 2
 
 
@@ -116,6 +117,60 @@ class TestPrefixAccounting:
         assert len(eng._slot_pages[slot]) == 1             # ceil(3/4)
         eng.check_leaks()
         eng.run()
+
+    def test_full_match_admits_with_zero_fresh_pages(self, tiny):
+        """The thundering-herd bound: a fully cached prompt takes NO
+        pages at admission — the peek writes nothing, so the pool is
+        untouched until the slot's first decode write."""
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=2, max_len=32, page_size=4,
+                          prefix_cache=True)
+        eng.submit(SYS, max_new_tokens=2)
+        eng.run()                               # warm: SYS's 2 pages cached
+        free_before = eng.page_stats["free"]
+        eng.submit(SYS, max_new_tokens=2)
+        eng._admit()
+        (slot,) = eng._active
+        assert eng._slot_pages[slot] == []                 # zero fresh pages
+        assert len(eng._slot_shared[slot]) == 2            # SYS reused
+        assert eng.page_stats["free"] == free_before
+        eng.check_leaks()
+        eng.run()
+
+    def test_admission_stalls_when_matched_pages_become_pinned(self, tiny):
+        """Pages an admission is about to pin must not be counted as
+        evictable by its own availability check: under pool pressure a
+        cached prompt's admission STALLS until a slot frees, instead of
+        over-admitting and crashing a later in-flight page grab with
+        'page reservation accounting is broken'."""
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=2, max_len=16, page_size=4,
+                          pages=5, prefix_cache=True)
+        warm = list(range(1, 13))               # 3 full pages
+        eng.submit(warm, max_new_tokens=2)
+        eng.run()                               # 3 cached pages, 2 free
+        eng.submit(list(range(90, 99)), max_new_tokens=2)  # unrelated
+        eng.submit(warm, max_new_tokens=2)      # cached: must wait its turn
+        out = eng.run()                         # drains — never RuntimeError
+        assert len(out) == 3
+        eng.check_leaks()
+
+    def test_ragged_suffixes_share_compiles(self, tiny):
+        """Admission compiles are keyed on (suffix bucket, match depth),
+        not raw suffix length: ragged warm suffixes reuse ONE compile
+        of the tail-padded suffix prefill."""
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=2, max_len=32, page_size=4,
+                          prefix_cache=True)
+        eng.submit(SYS, max_new_tokens=2)
+        eng.run()                               # cold compile (depth 0)
+        for i, sfx in enumerate([1, 2, 3, 5, 7]):   # ragged, one bucket
+            eng.submit(SYS + [40 + 10 * i + j for j in range(sfx)],
+                       max_new_tokens=2)
+        eng.run()
+        # one entry for the cold prompt (pos0=0), one shared by every
+        # warm ragged suffix (pos0=8, bucket 8)
+        assert eng._prefill_suffix._cache_size() == 2
 
     def test_leak_check_at_every_tick(self, tiny):
         cfg, model, params = tiny
