@@ -27,10 +27,13 @@ admission — pool adoption + one block-table row vs whole-row splice —
 at B=8, with decode at max_len 128 and 1024); under
 ``"paged_attn_kernel"``, the in-place paged decode-attention
 kernel/oracle vs the gather-then-flash read it replaced, at max_len 128
-and 1024; and under ``"spec_decode"``, speculative decoding through the
+and 1024; under ``"spec_decode"``, speculative decoding through the
 paged engine — K ∈ {2, 4, 8} drafted tokens per tick for an aligned
 (acceptance-1.0 ceiling) and a truncated weight-shared drafter, against
-the plain-decode baseline from the same run.
+the plain-decode baseline from the same run; and under
+``"serving_latency"``, tail inter-token latency (metrics-layer p50/p99)
+with long prompts admitting mid-stream — the pipelined scheduler's
+chunked background prefill vs the synchronous admission stall.
 """
 
 from __future__ import annotations
@@ -322,6 +325,30 @@ def paged_cache_benches(slots=8, s0=64, decode_steps=8, page_size=16,
         "us_admission_paged": round(t_admit, 2),
         "admission_speedup_paged_vs_row_splice": round(t_splice / t_admit, 3),
     })
+
+    # client-visible inter-token latency through the REAL paged engine
+    # (host emission timestamps off the metrics layer, not the bare
+    # jitted step above — this is what a streaming client measures)
+    from repro.runtime.metrics import ServingMetrics
+    from repro.runtime.serve_loop import ServeEngine
+
+    eng = ServeEngine(model, params, slots=slots, max_len=max_lens[0],
+                      page_size=page_size)
+    metrics = ServingMetrics()
+    eng.on_token = lambda uid, tok, done: metrics.token(uid)
+    rng_itl = np.random.default_rng(1)
+    for _ in range(slots):
+        metrics.submitted(eng.submit(
+            rng_itl.integers(1, cfg.vocab_size, 16).tolist(),
+            max_new_tokens=8 + 4 * decode_steps))
+    for _ in range(4):
+        eng.step()
+    metrics.itl = type(metrics.itl)(8192)      # drop warmup gaps
+    for _ in range(4 * decode_steps):
+        eng.step()
+    itl = metrics.itl.snapshot()
+    record["engine_itl"] = {"itl_p50_us": itl["p50_us"],
+                            "itl_p99_us": itl["p99_us"]}
     return rows, record
 
 
@@ -410,12 +437,21 @@ def spec_decode_benches(ks=(2, 4, 8), slots=4, n_req=4, max_new=96,
     reqs = [rng_prompts.integers(1, vocab, prompt_len) for _ in range(n_req)]
 
     def engine_tok_s(tparams, spec_kw, ticks):
+        from repro.runtime.metrics import ServingMetrics
+
         eng = ServeEngine(model, tparams, slots=slots, max_len=max_len,
                           **spec_kw)
+        # client-visible inter-token latency off the metrics layer: a
+        # spec tick emits its committed burst at once, so the ITL
+        # distribution is near-zero intra-burst gaps + tick-time
+        # inter-burst gaps — the shape a streaming client actually sees
+        metrics = ServingMetrics()
+        eng.on_token = lambda uid, tok, done: metrics.token(uid)
         for r in reqs[:slots]:
-            eng.submit(r, max_new_tokens=budget)
+            metrics.submitted(eng.submit(r, max_new_tokens=budget))
         for _ in range(4):             # admission + dispatch warmup
             eng.step()
+        metrics.itl = type(metrics.itl)(8192)    # drop warmup gaps
         p0 = eng._pos.copy()
         t0 = time.perf_counter()
         for _ in range(ticks):
@@ -423,9 +459,11 @@ def spec_decode_benches(ks=(2, 4, 8), slots=4, n_req=4, max_new=96,
         dt = time.perf_counter() - t0
         toks = int((eng._pos - p0).sum())
         assert len(eng._active) == slots   # nobody finished mid-window
-        return toks / dt, eng
+        itl = metrics.itl.snapshot()
+        return toks / dt, eng, {"itl_p50_us": itl["p50_us"],
+                                "itl_p99_us": itl["p99_us"]}
 
-    plain_tok_s, _ = engine_tok_s(params, {}, ticks=max_new)
+    plain_tok_s, _, plain_itl = engine_tok_s(params, {}, ticks=max_new)
     rows = [(f"spec_plain_decode_b{slots}", 1e6 * slots / plain_tok_s,
              "plain paged engine tick (the spec baseline)")]
     record = {
@@ -433,6 +471,7 @@ def spec_decode_benches(ks=(2, 4, 8), slots=4, n_req=4, max_new=96,
         "target_layers": cfg.num_layers, "drafter_layers": dcfg.num_layers,
         "backend": jax.default_backend(),
         "plain_decode_tok_s": round(plain_tok_s, 1),
+        "plain_decode_itl": plain_itl,
     }
     best = 0.0
     for arm, tparams, dparams in (("aligned", a_params, a_draft),
@@ -441,7 +480,7 @@ def spec_decode_benches(ks=(2, 4, 8), slots=4, n_req=4, max_new=96,
         for k in ks:
             # a spec tick commits up to k+1 tokens/slot: fewer ticks
             # cover the same ~max_new-token window per slot
-            tok_s, eng = engine_tok_s(tparams, {
+            tok_s, eng, itl = engine_tok_s(tparams, {
                 "draft_model": dmodel, "draft_params": dparams,
                 "spec_k": k}, ticks=max(8, max_new // (k + 1)))
             # the aligned arm's own plain baseline is the same engine
@@ -454,6 +493,7 @@ def spec_decode_benches(ks=(2, 4, 8), slots=4, n_req=4, max_new=96,
                 "speedup_vs_plain": round(speedup, 3),
                 "tok_per_tick": round(eng.spec_stats["emitted"]
                                       / max(eng.spec_stats["ticks"], 1), 2),
+                **itl,
             }
             if arm == "aligned":
                 best = max(best, speedup)
@@ -517,24 +557,31 @@ def shared_prefix_benches(slots=8, sys_len=248, sfx_len=8, max_new=4,
                 for _ in range(slots)]
 
     def admission(prefix):
+        from repro.runtime.metrics import ServingMetrics
+
         eng = ServeEngine(model, params, slots=slots, max_len=max_len,
                           page_size=page_size, prefix_cache=prefix)
+        metrics = ServingMetrics()
+        eng.on_token = lambda uid, tok, done: metrics.token(uid)
         for p in batch(999):      # compile + (warm arm) cache warmup
             eng.submit(p, max_new_tokens=max_new)
         eng.run()
+        metrics.itl = type(metrics.itl)(8192)    # drop warmup gaps
         times, pages = [], []
         for i in range(passes):
             for p in batch(i):
-                eng.submit(p, max_new_tokens=max_new)
+                metrics.submitted(eng.submit(p, max_new_tokens=max_new))
             t0 = time.perf_counter()
             eng._admit()
             times.append(time.perf_counter() - t0)
             pages.append(sum(len(v) for v in eng._slot_pages.values()))
             eng.run()             # drain + leak check
-        return 1e6 * min(times), pages[0], eng
+        itl = metrics.itl.snapshot()
+        return (1e6 * min(times), pages[0], eng,
+                {"itl_p50_us": itl["p50_us"], "itl_p99_us": itl["p99_us"]})
 
-    cold_us, cold_pages, _ = admission(False)
-    warm_us, warm_pages, eng = admission(True)
+    cold_us, cold_pages, _, cold_itl = admission(False)
+    warm_us, warm_pages, eng, warm_itl = admission(True)
     ptoks = slots * prompt_len    # logical prompt tokens per wave
     fs = eng.prefix_stats
     record = {
@@ -542,12 +589,12 @@ def shared_prefix_benches(slots=8, sys_len=248, sfx_len=8, max_new=4,
         "page_size": page_size, "backend": jax.default_backend(),
         "cold": {"us_admission": round(cold_us, 1),
                  "admission_tok_s": round(ptoks / (cold_us / 1e6), 1),
-                 "pages_allocated": cold_pages},
+                 "pages_allocated": cold_pages, **cold_itl},
         "warm": {"us_admission": round(warm_us, 1),
                  "admission_tok_s": round(ptoks / (warm_us / 1e6), 1),
                  "pages_allocated": warm_pages,
                  "prefix_hit_rate": round(fs["hit_rate"], 3),
-                 "cow_copies": fs["cow_copies"]},
+                 "cow_copies": fs["cow_copies"], **warm_itl},
         "speedup_warm_vs_cold": round(cold_us / warm_us, 3),
     }
     rows = [
@@ -557,6 +604,147 @@ def shared_prefix_benches(slots=8, sys_len=248, sfx_len=8, max_new=4,
         (f"shared_prefix_warm_admit_b{slots}", warm_us,
          f"warm wave: {sys_len}-token prefix cached, {warm_pages} pages "
          f"({record['speedup_warm_vs_cold']}x)"),
+    ]
+    return rows, record
+
+
+def serving_latency_benches(slots=64, n_dec=60, long_len=96, n_long=4,
+                            decode_ticks=300, chunk=8):
+    """Tail inter-token latency under background prefill: the number the
+    async front end exists for.
+
+    Three arms, one decode-heavy model (a full-batch decode tick dwarfs
+    one prefill chunk window), the same ``n_dec`` streaming decoders:
+
+    * ``decode_only`` — PipelinedScheduler, no arrivals: the ITL floor.
+    * ``pipelined_bg_prefill`` — ``n_long`` fresh ``long_len``-token
+      prompts arrive mid-window and admit through the split prefill
+      stream, ONE grid-aligned ``chunk``-token window dispatched between
+      decode ticks; decoders never stop.  The acceptance number: decode
+      ITL p99 here must stay within 1.5x the decode-only p99.
+    * ``sync_stall`` — the same arrivals served by the synchronous
+      ``ServeEngine.step`` loop, where admission prefills the whole
+      prompt inside one tick: every decoder's inter-token gap eats the
+      full prefill (the p99 cliff the scheduler removes).
+
+    The arms tick round-robin inside ONE measured loop, so machine noise
+    (CPU frequency drift, page-cache pressure) lands on every arm of the
+    same run and the acceptance ratio compares like with like.  Each
+    arm's tick is timed host-side around its own dispatch; every tick
+    each streaming decoder emits exactly one token, so a tick's duration
+    IS the inter-token gap a client of that arm sees.  Decoder prompts
+    are short (one chunk window) with staggered lengths so page-boundary
+    mapping ticks decorrelate across slots, and the first long prompt is
+    served inside the warmup window so chunk-grid jit compiles never
+    pollute a measured gap.  Returns (csv_rows, record); the record
+    lands in BENCH_ent_matmul.json under "serving_latency".
+    """
+    import gc
+    from dataclasses import replace
+
+    from repro.configs import get_config, reduced_config
+    from repro.models.transformer import build_model
+    from repro.runtime.scheduler import PipelinedScheduler
+    from repro.runtime.serve_loop import ServeEngine
+
+    if n_dec + 2 > slots:
+        raise ValueError("need at least two free slots for arrivals")
+    cfg = replace(reduced_config(get_config("qwen2.5-3b")),
+                  num_layers=4, d_model=256, num_heads=4, num_kv_heads=1,
+                  head_dim=64, d_ff=1024)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    vocab = cfg.vocab_size
+    warmup = n_dec + -(-long_len // chunk) + 18
+    total = warmup + decode_ticks
+    dec_new = total + 16               # decoders outlive the whole window
+    max_len = max(chunk + dec_new + 16, long_len + 8)
+    rng = np.random.default_rng(0)
+    dec_prompts = [rng.integers(1, vocab,
+                                int(rng.integers(3, chunk + 1))).tolist()
+                   for _ in range(n_dec)]
+    long_prompts = [rng.integers(1, vocab, long_len).tolist()
+                    for _ in range(n_long + 1)]   # [0] warms the jit grid
+    gap = decode_ticks // (n_long + 1)
+    arrive_at = {(i + 1) * gap: long_prompts[1 + i] for i in range(n_long)}
+
+    def mk_sched():
+        eng = ServeEngine(model, params, slots=slots, max_len=max_len,
+                          seed=9)
+        return eng, PipelinedScheduler(eng, pipeline_depth=1,
+                                       prefill_chunk=chunk)
+
+    eng_f, floor = mk_sched()
+    eng_b, bg = mk_sched()
+    eng_s = ServeEngine(model, params, slots=slots, max_len=max_len, seed=9)
+    uids = {"floor": [], "bg": [], "sync": []}
+    for p in dec_prompts:
+        uids["floor"].append(floor.submit(p, max_new_tokens=dec_new))
+        uids["bg"].append(bg.submit(p, max_new_tokens=dec_new))
+        uids["sync"].append(eng_s.submit(p, max_new_tokens=dec_new))
+    bg.submit(long_prompts[0], max_new_tokens=2)    # compile chunk grid
+    eng_s.submit(long_prompts[0], max_new_tokens=2)
+    for _ in range(warmup):
+        floor.tick(); bg.tick(); eng_s.step()
+
+    ticks = {"floor": [], "bg": [], "sync": []}
+    arms = (("floor", floor.tick), ("bg", bg.tick), ("sync", eng_s.step))
+    gc.collect()
+    gc.disable()
+    try:
+        for t in range(decode_ticks):
+            if t in arrive_at:
+                bg.submit(arrive_at[t], max_new_tokens=2)
+                eng_s.submit(arrive_at[t], max_new_tokens=2)
+            for name, tick in arms:
+                t0 = time.perf_counter()
+                tick()
+                ticks[name].append(time.perf_counter() - t0)
+    finally:
+        gc.enable()
+
+    # teardown without draining dec_new leftover tokens: cancel frees
+    # slots and pages immediately and the leak probe proves it
+    for u in uids["floor"]:
+        floor.cancel(u)
+    for u in uids["bg"]:
+        bg.cancel(u)
+    for u in uids["sync"]:
+        eng_s.cancel(u)
+    floor.flush(); bg.flush()
+    eng_f.check_leaks(); eng_b.check_leaks(); eng_s.check_leaks()
+
+    def pct(xs):
+        a = np.asarray(xs) * 1e6
+        return {"p50_us": float(np.percentile(a, 50)),
+                "p99_us": float(np.percentile(a, 99))}
+
+    base, bgp, stall = pct(ticks["floor"]), pct(ticks["bg"]), pct(ticks["sync"])
+    r_bg = bgp["p99_us"] / base["p99_us"]
+    r_stall = stall["p99_us"] / base["p99_us"]
+    record = {
+        "slots": slots, "streaming_decoders": n_dec, "long_len": long_len,
+        "n_long": n_long, "prefill_chunk": chunk,
+        "decode_ticks": decode_ticks, "interleaved_arms": True,
+        "backend": jax.default_backend(),
+        "decode_only": {"itl_p50_us": base["p50_us"],
+                        "itl_p99_us": base["p99_us"]},
+        "pipelined_bg_prefill": {
+            "itl_p50_us": bgp["p50_us"], "itl_p99_us": bgp["p99_us"],
+            "p99_ratio_vs_decode_only": round(r_bg, 3)},
+        "sync_stall": {"itl_p50_us": stall["p50_us"],
+                       "itl_p99_us": stall["p99_us"],
+                       "p99_ratio_vs_decode_only": round(r_stall, 3)},
+        "pipelined_p99_within_1p5x": bool(r_bg <= 1.5),
+    }
+    rows = [
+        (f"serving_itl_p99_decode_only_b{n_dec}", base["p99_us"],
+         "pipelined scheduler, no arrivals (ITL floor)"),
+        (f"serving_itl_p99_bg_prefill_b{n_dec}", bgp["p99_us"],
+         f"{n_long} x {long_len}-tok prompts admit chunked mid-stream "
+         f"({r_bg:.2f}x floor)"),
+        (f"serving_itl_p99_sync_stall_b{n_dec}", stall["p99_us"],
+         f"same arrivals, synchronous admission ({r_stall:.2f}x floor)"),
     ]
     return rows, record
 
@@ -817,6 +1005,14 @@ def kernel_benches(quick: bool = False):
     xrows, xrecord = shared_prefix_benches(**({"passes": 1} if quick else {}))
     rows += xrows
     record["shared_prefix"] = xrecord
+    # tail ITL under background prefill: pipelined scheduler vs the
+    # synchronous admission stall (the async front end's acceptance
+    # number) — arrivals stay in --quick, only the window shrinks
+    lrows, lrecord = serving_latency_benches(
+        **({"slots": 40, "n_dec": 36, "long_len": 16, "n_long": 2,
+            "decode_ticks": 60} if quick else {}))
+    rows += lrows
+    record["serving_latency"] = lrecord
 
     with open("BENCH_ent_matmul.json", "w") as f:
         json.dump(record, f, indent=1)

@@ -6,11 +6,20 @@
 ``--engine`` serves a ragged request stream through the continuous-
 batching ``ServeEngine`` (fixed slots, batched prefill on admission,
 per-slot EOS/max-token stop) instead of one fixed-shape ``generate``.
+
+``--http`` puts the async front end on top: a ``PipelinedScheduler``
+driving the engine plus the stdlib HTTP/SSE server from
+``runtime.server`` (``POST /v1/completions`` streams tokens,
+``GET /metrics`` reports TTFT/ITL percentiles).  ``--http-smoke`` runs
+a scripted client against the live server instead of blocking — one
+streamed completion, a ``/metrics`` probe, a clean-shutdown leak check
+— which is what the CI smoke step invokes.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -19,9 +28,65 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.configs.base import QuantConfig
+from repro.launch import env as envmod
 from repro.models.transformer import build_model
 from repro.quant.quantize import quantize_params
 from repro.runtime.serve_loop import ServeEngine, generate
+
+
+def _serve_http(args, cfg, engine) -> None:
+    """--http: scheduler + SSE server; --http-smoke runs the scripted
+    client (one streamed completion, /metrics, clean shutdown)."""
+    from repro.runtime.scheduler import PipelinedScheduler
+    from repro.runtime.server import ServingServer
+
+    sched = PipelinedScheduler(engine, pipeline_depth=args.pipeline_depth,
+                               max_queue=args.max_queue,
+                               prefill_chunk=args.prefill_chunk or None)
+    srv = ServingServer(sched, host=args.host, port=args.port)
+    host, port = srv.start()
+    print(f"serving http://{host}:{port} "
+          f"(backend={engine.cache_kind}, slots={engine.slots}, "
+          f"depth={sched.depth})")
+    if not args.http_smoke:
+        try:
+            srv.serve_forever()
+        except KeyboardInterrupt:
+            srv.stop()
+        return
+
+    import http.client
+
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, args.prompt_len).tolist()
+    conn = http.client.HTTPConnection(host, port, timeout=600)
+    conn.request(
+        "POST", "/v1/completions",
+        json.dumps({"tokens": prompt, "max_new_tokens": args.steps}),
+        {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    assert resp.status == 200, f"completions: HTTP {resp.status}"
+    events = [json.loads(line[6:])
+              for line in resp.read().decode().splitlines()
+              if line.startswith("data: ")]
+    conn.close()
+    assert events and events[-1].get("done"), "SSE stream did not finish"
+    streamed = [e["token"] for e in events[:-1]]
+    assert streamed == events[-1]["tokens"], "stream/final token mismatch"
+
+    conn = http.client.HTTPConnection(host, port, timeout=60)
+    conn.request("GET", "/metrics")
+    m = json.loads(conn.getresponse().read())
+    conn.close()
+    assert m["leaks_clean"], "allocator leak after completion"
+    assert m["requests"]["finished"] == 1
+
+    srv.stop()
+    engine.check_leaks()
+    ttft, itl = m["ttft"], m["inter_token"]
+    print(f"http smoke: {len(streamed)} tokens streamed, "
+          f"ttft p50 {ttft['p50_us']}us, itl p50 {itl['p50_us']}us / "
+          f"p99 {itl['p99_us']}us, 0 leaks")
 
 
 def main():
@@ -74,7 +139,22 @@ def main():
     ap.add_argument("--top-p", type=float, default=0.0,
                     help="on-device sampler nucleus truncation (0 = off)")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP/SSE: PipelinedScheduler + "
+                         "stdlib asyncio server (implies --engine)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="HTTP port (0 = ephemeral, printed on bind)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="decode ticks dispatched ahead of host sync")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="admission control: shed (429) past this depth")
+    ap.add_argument("--http-smoke", action="store_true",
+                    help="scripted client against the live server, then "
+                         "clean shutdown + leak check (CI smoke)")
+    envmod.add_env_args(ap)
     args = ap.parse_args()
+    envmod.apply_env_args(args)
     chunk = args.prefill_chunk or None
     top_k = args.top_k or None
     top_p = args.top_p or None
@@ -91,7 +171,7 @@ def main():
 
     rng = np.random.default_rng(0)
 
-    if args.engine:
+    if args.engine or args.http:
         slots = args.slots or args.batch
         n_req = 2 * args.batch
         max_len = 2 * args.prompt_len + args.steps + 8
@@ -117,6 +197,9 @@ def main():
                              pages=args.pages or None,
                              prefix_cache=("auto" if args.prefix_cache is None
                                            else args.prefix_cache), **spec_kw)
+        if args.http:
+            _serve_http(args, cfg, engine)
+            return
         sys_prompt = rng.integers(0, cfg.vocab_size,
                                   args.shared_prefix).tolist()
         lens = rng.integers(max(1, args.prompt_len // 2),

@@ -23,6 +23,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import sharding as shd
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import ARCH_IDS, get_config, get_optim, reduced_config
+from repro.launch import env as envmod
 from repro.configs.base import TrainConfig
 from repro.data.pipeline import Prefetcher, SyntheticSource, TokenStream
 from repro.models.transformer import build_model
@@ -49,7 +50,9 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-sized)")
     ap.add_argument("--log-every", type=int, default=10)
+    envmod.add_env_args(ap)
     args = ap.parse_args()
+    envmod.apply_env_args(args)
 
     cfg = get_config(args.arch)
     if args.smoke:

@@ -269,9 +269,10 @@ def prefill_step(cfg: ModelConfig, p, x, cache, start=None, pos0: int = 0,
     so parity there is exact-math at round-off (atol) level.
 
     ``pos0`` (static int) is the chunk offset for chunked prefill: the
-    queries attend over the retained context (``cache.context(pos0)`` —
-    the prior rows gathered into position order BEFORE the write, since
-    a ring chunk may evict exactly the slots the earliest queries still
+    queries attend over the retained context (``cache.context(pos0)``,
+    gathered after the write when the backend's ``context_after_write``
+    says the chunk cannot touch it, before the write on the ring — a
+    ring chunk may evict exactly the slots the earliest queries still
     attend to) plus the chunk itself.  ``pos0=0`` attends over the fresh
     K/V directly — no cache read-back at all.  Each call requires
     S <= cache width; ``Model.prefill`` chunks longer prompts.
@@ -284,8 +285,19 @@ def prefill_step(cfg: ModelConfig, p, x, cache, start=None, pos0: int = 0,
     positions = cols[None, :] - start_b[:, None]      # [B, S] relative
     q, k, v = _project(cfg, p, x, positions)
 
-    kc, vc, ksc, vsc, ctx = cache.context(pos0)
     new, kf, vf, ksf, vsf = cache.write_prompt(k, v, pos0)
+    # Read the retained context AFTER the chunk write wherever the
+    # backend guarantees the write cannot touch it (dense rows and paged
+    # pages at [0, pos0) are disjoint from the chunk's [pos0, pos0+S)).
+    # Gathering the pre-write value would be a second use of the pool
+    # the scatter updates, which XLA preserves by copying the WHOLE
+    # pool — a pool-sized temp on every chunk.  The ring backend wraps
+    # chunk writes onto slots its earliest queries still attend to, so
+    # it keeps the pre-write gather (and pays the copy on its small
+    # windowed pool).  ``write=False`` also reads pre-write state: the
+    # store is dead there and the returned cache stays untouched.
+    src = new if (write and cache.context_after_write) else cache
+    kc, vc, ksc, vsc, ctx = src.context(pos0)
 
     def cat(prev, fresh):
         return fresh if prev is None else jnp.concatenate(

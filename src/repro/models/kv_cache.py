@@ -194,6 +194,15 @@ class KVCache(CacheSlots):
 
     window: int | None = None
 
+    #: ``context(pos0)`` may be satisfied from the POST-write cache: a
+    #: prompt chunk writes positions ``[pos0, pos0+S)``, disjoint from
+    #: the retained context ``[0, pos0)`` (dense rows / paged pages), so
+    #: the read-back is bit-identical and the pre-write pool keeps a
+    #: single use — the in-place chunk write needs no pool-sized copy.
+    #: The ring backend wraps chunk writes onto the very slots its
+    #: earliest queries still attend to and must gather BEFORE writing.
+    context_after_write = True
+
     @property
     def quantized(self) -> bool:
         return self.k_s is not None
@@ -323,6 +332,7 @@ class RingCache(KVCache):
     k_s: jax.Array | None = None
     v_s: jax.Array | None = None
     window: int = 0                # attention window (static metadata)
+    context_after_write = False    # wrap writes can evict context slots
 
     def write_token(self, k, v, pos, per_seq: bool):
         slot = pos % self.width

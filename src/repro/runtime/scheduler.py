@@ -1,0 +1,556 @@
+"""Pipelined prefill/decode scheduler: the async half of the serving stack.
+
+``ServeEngine.run`` is a synchronous admit -> dispatch -> block loop:
+every tick the host syncs the sampled tokens (``np.asarray``) before it
+may dispatch the next, so the device idles during host bookkeeping, and
+a long prompt's admission prefill stalls every in-flight decoder for
+its full duration.  :class:`PipelinedScheduler` drives the SAME engine
+— same jitted steps, same page allocator, same sampler keys — with two
+structural changes, and emits bit-identical streams while doing it:
+
+1. **Pipelined decode.**  Tick N+1 is dispatched before tick N's
+   sampled tokens are synced: the sampler's [slots] device array feeds
+   straight back in as the next tick's input (no host round-trip), and
+   the host processes tick N's tokens — EOS checks, emission, slot
+   frees — while tick N+1 computes.  ``np.asarray`` (the one blocking
+   sync) happens only when an entry leaves the pipeline;
+   ``jax.block_until_ready`` only at the stream boundary (``flush``).
+   Because the engine can't know a slot finished until its token is
+   processed, a dispatch-ahead tick may write one position past the
+   host mirror — admission therefore reserves ``pipeline_depth`` extra
+   positions per request (``ServeEngine._reserve_slack``), mirroring
+   how speculative ticks reserve ``spec_k``, and every dispatch runs
+   ``_map_tick_pages(in_flight)`` so the write can only land in a page
+   this slot holds exclusively (or the compute-skipped null page) —
+   never in prefix-shared bytes.  A processed entry whose slot was
+   freed or re-admitted in the meantime is discarded by uid guard.
+
+2. **Split prefill/decode streams.**  On the default paged +
+   prefix-cache engine, admission no longer runs as one fused
+   dispatch + host sync.  The prompt's unshared suffix prefills in
+   grid-aligned chunks (windows of ``prefill_chunk`` tokens at
+   absolute multiples of it, so jit compile keys stay bounded:
+   ``pos0`` is static in ``Model.apply``), ONE chunk dispatched per
+   tick between decode dispatches — a 10k-token prompt admits as many
+   small dispatches interleaved with everyone else's decode ticks
+   instead of one monolithic stall.  While a slot is mid-prefill it is
+   parked: the decode tick's pos-override pins its device position to
+   the chunk frontier, whose write lands in the slot's own
+   exclusively-held (or unmapped -> null) page and is overwritten by
+   the next chunk before any pos-bounded read can see it.  The first
+   sampled token stays ON DEVICE (fed to the next tick via the token
+   feed) and its host emission is deferred to entry processing, so
+   admission never syncs.  Chunk boundaries don't change prefill
+   numerics (each K/V row depends on token + absolute position only;
+   the oracle softmax sees the same columns), so streams match the
+   synchronous engine bit for bit — asserted in tests.
+
+   Dense/ring backends, engines without a prefix cache, and
+   speculative engines admit atomically through ``_admit_one``
+   (speculative engines tick through ``engine.step()`` — the verify
+   burst IS the decode stream); they still get admission control and
+   metrics, and non-spec engines still get pipelined decode.
+
+On top sit the serving policies the synchronous loop never had:
+**admission control** (``max_queue`` bound — submit past it is shed
+with a 429-style ``None``, never a stall), **priorities** (lower value
+admits first; FIFO within a priority), and **per-request deadlines**
+(a request still queued past its deadline is shed, not started).  All
+request lifecycle events feed a :class:`~repro.runtime.metrics.
+ServingMetrics` (TTFT, inter-token latency, queue depth, shed counts).
+
+Thread safety: one re-entrant lock guards every public method, so an
+HTTP thread may ``submit``/``cancel`` while the engine thread runs
+``tick`` — cancellation mid-prefill or mid-flight releases the slot's
+pages and prefix-cache pins through ``ServeEngine._release_slot`` and
+the allocator leak check stays clean (asserted in tests, cancelling at
+every tick).
+"""
+
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.metrics import ServingMetrics
+from repro.runtime.serve_loop import Request, ServeEngine, _SlotState
+
+QUEUED, PREFILL, ACTIVE = "queued", "prefill", "active"
+DONE, SHED, CANCELLED = "done", "shed", "cancelled"
+
+
+@dataclass(order=True)
+class _QEntry:
+    priority: int
+    seq: int
+    req: Request = field(compare=False)
+    deadline: float | None = field(compare=False, default=None)
+
+
+@dataclass
+class _Entry:
+    """One dispatched-but-unprocessed decode tick."""
+    tok_dev: object                  # [slots] int32 on device (or None)
+    active: list                     # [(slot, uid)] snapshot at dispatch
+    admits: list = field(default_factory=list)   # [(slot, uid, tok[1] dev)]
+
+
+@dataclass
+class _Prefill:
+    """A chunked admission in flight: positions [lo, n) still to write."""
+    slot: int
+    req: Request
+    lo: int                          # frontier: next position to prefill
+    n: int                           # prompt length
+
+
+class PipelinedScheduler:
+    """Asynchronous front-end scheduler over a :class:`ServeEngine`.
+
+    Parameters
+    ----------
+    engine: the (idle) engine to drive.  The scheduler owns admission —
+        don't mix with ``engine.submit``/``engine.run``.
+    pipeline_depth: decode ticks allowed in flight past the host (0 =
+        synchronous processing; 1 = classic host/device overlap).
+    max_queue: queued-request bound; ``submit`` past it returns None
+        (shed) instead of queueing — overload sheds, it never stalls.
+    prefill_chunk: chunk-grid width for split-stream admission
+        (default: the engine's ``prefill_chunk``, else 32).
+    metrics: a ``ServingMetrics`` to record into (default: fresh one).
+    """
+
+    def __init__(self, engine: ServeEngine, *, pipeline_depth: int = 1,
+                 max_queue: int = 256, prefill_chunk: int | None = None,
+                 metrics: ServingMetrics | None = None,
+                 clock=time.monotonic):
+        if pipeline_depth < 0:
+            raise ValueError(f"pipeline_depth must be >= 0, got "
+                             f"{pipeline_depth}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if engine._active or engine._queue:
+            raise ValueError("scheduler must take over an idle engine")
+        self.engine = engine
+        self.depth = 0 if engine._spec else pipeline_depth
+        self.max_queue = max_queue
+        self.chunk = max(1, prefill_chunk or engine.prefill_chunk or 32)
+        self.metrics = metrics if metrics is not None else ServingMetrics()
+        self._clock = clock
+        # dispatch-ahead ticks write past the host pos mirror: widen
+        # every reservation by the pipeline depth (the speculative
+        # engine's spec_k slack, generalized) BEFORE any admission
+        engine._reserve_slack = self.depth
+        self._chunked = (engine.cache_kind == "paged"
+                         and engine._prefix is not None
+                         and not engine._spec)
+        self._lock = threading.RLock()
+        self._heap: list[_QEntry] = []
+        self._seq = 0
+        self._queued = 0                 # live (non-cancelled) heap entries
+        self._status: dict[int, str] = {}
+        self._streams: dict[int, object] = {}   # uid -> cb(tok, done)
+        self._pipeline: deque[_Entry] = deque()
+        self._prefill: _Prefill | None = None
+        self._tok_dev = None             # [slots] device token feed
+        self._park_mask = np.zeros((engine.slots,), bool)
+        self._park_pos = np.zeros((engine.slots,), np.int32)
+        self._chain_on_token = engine.on_token
+        engine.on_token = self._on_token
+
+        model, sampler = engine.model, engine._sampler
+
+        # Every jit below DONATES the cache it threads: the KV pool is
+        # tens of MB, and a functional scatter without donation copies
+        # all of it on every dispatch.  The scheduler's lineage is
+        # strictly linear (each tick's cache feeds exactly the next
+        # dispatch, nothing on the host retains the old buffers), so
+        # XLA updates the pool in place and a decode tick or prefill
+        # chunk costs only its compute.
+
+        def _greedy_tick(params, cache, toks, pmask, ppos):
+            cache = dict(cache)
+            cache["pos"] = jnp.where(pmask, ppos, cache["pos"])
+            logits, cache = model.decode_step(params, cache, tokens=toks)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        def _sampled_tick(params, cache, toks, pmask, ppos, temps, keys):
+            cache = dict(cache)
+            cache["pos"] = jnp.where(pmask, ppos, cache["pos"])
+            logits, cache = model.decode_step(params, cache, tokens=toks)
+            tok, keys = sampler(logits, keys, temps)
+            return tok, keys, cache
+
+        self._greedy_tick = jax.jit(_greedy_tick, donate_argnums=(1,))
+        self._sampled_tick = jax.jit(_sampled_tick, donate_argnums=(1,))
+
+        # The chunk jits fuse view-gather -> apply -> pool merge into one
+        # dispatch over the FULL layer tuple (slot traced, pos0 static):
+        # splitting them would force the donated pool out through three
+        # jit boundaries and re-copy it at each one.
+
+        def _chunk_mid(params, toks, layers, slot, pos0):
+            # interior prefill chunk: cache write-through only — no
+            # final norm / vocab projection for chunks that don't
+            # contain the last real token
+            view = tuple(c.prefill_view(slot) if hasattr(c, "prefill_view")
+                         else c for c in layers)
+            c = {"layers": view, "pos": jnp.full((), pos0, jnp.int32)}
+            out = model.apply(params, tokens=toks, cache=c,
+                              write_cache=True, need_logits=False,
+                              pos0=pos0)
+            return tuple(f.admit(o, slot) if hasattr(f, "admit") else f
+                         for f, o in zip(layers, out["cache"]["layers"]))
+
+        def _chunk_last(params, toks, layers, slot, pos0, last_index):
+            # final chunk: tail-padded to the grid window, the last REAL
+            # token's logits gathered at a traced index so the compile
+            # key is (window shape, pos0) — not the raw prompt length
+            view = tuple(c.prefill_view(slot) if hasattr(c, "prefill_view")
+                         else c for c in layers)
+            c = {"layers": view, "pos": jnp.full((), pos0, jnp.int32)}
+            out = model.apply(params, tokens=toks, cache=c,
+                              write_cache=True, last_only=True, pos0=pos0,
+                              last_index=last_index)
+            merged = tuple(f.admit(o, slot) if hasattr(f, "admit") else f
+                           for f, o in zip(layers, out["cache"]["layers"]))
+            return out["logits"][:, 0], merged
+
+        self._chunk_mid = jax.jit(_chunk_mid, static_argnums=(4,),
+                                  donate_argnums=(2,))
+        self._chunk_last = jax.jit(_chunk_last, static_argnums=(4,),
+                                   donate_argnums=(2,))
+
+    # .. intake ..
+    def submit(self, tokens, *, max_new_tokens: int = 32,
+               temperature: float = 0.0, priority: int = 0,
+               deadline: float | None = None, on_token=None) -> int | None:
+        """Queue a request; returns its uid, or None when the queue is
+        full (shed — the caller answers 429).  ``priority``: lower
+        admits first (FIFO within a level).  ``deadline``: seconds from
+        now; still queued past it, the request is shed instead of
+        started.  ``on_token(tok, done)`` streams tokens as they are
+        emitted (called under the scheduler lock — keep it quick)."""
+        with self._lock:
+            if self._queued >= self.max_queue:
+                self.metrics.shed("queue_full")
+                return None
+            # engine.submit runs the capacity validation (prompt length
+            # vs max_len, worst-case pages vs pool) and mints the uid;
+            # the request then moves to the scheduler's own queue
+            uid = self.engine.submit(tokens, max_new_tokens=max_new_tokens,
+                                     temperature=temperature)
+            req = self.engine._queue.pop()
+            self._seq += 1
+            heapq.heappush(self._heap, _QEntry(
+                priority, self._seq, req,
+                None if deadline is None else self._clock() + deadline))
+            self._queued += 1
+            self._status[uid] = QUEUED
+            if on_token is not None:
+                self._streams[uid] = on_token
+            self.metrics.submitted(uid)
+            return uid
+
+    def cancel(self, uid: int) -> bool:
+        """Abort ``uid`` wherever it is — queued, mid-prefill, or
+        decoding.  Slot, pages, and prefix-cache pins are released
+        (allocator leak check stays clean); no result is recorded.
+        Returns False for unknown or already-terminal uids."""
+        with self._lock:
+            st = self._status.get(uid)
+            if st not in (QUEUED, PREFILL, ACTIVE):
+                return False
+            if st == QUEUED:
+                self._queued -= 1        # heap entry dies lazily at pop
+            elif st == PREFILL:
+                pf = self._prefill
+                assert pf is not None and pf.req.uid == uid
+                self._prefill = None
+                self._park_mask[pf.slot] = False
+                self.engine._release_slot(pf.slot)
+            else:
+                self.engine.cancel(uid)
+            self._status[uid] = CANCELLED
+            self._streams.pop(uid, None)
+            self.metrics.cancelled(uid)
+            return True
+
+    def status(self, uid: int) -> str | None:
+        with self._lock:
+            return self._status.get(uid)
+
+    @property
+    def results(self) -> dict[int, list[int]]:
+        with self._lock:
+            return dict(self.engine._results)
+
+    @property
+    def busy(self) -> bool:
+        with self._lock:
+            return bool(self._queued or self.engine._active
+                        or self._prefill or self._pipeline)
+
+    # .. emission ..
+    def _on_token(self, uid: int, tok: int, done: bool) -> None:
+        self.metrics.token(uid)
+        if done:
+            self.metrics.finished(uid)
+            self._status[uid] = DONE
+        cb = self._streams.get(uid)
+        if cb is not None:
+            cb(tok, done)
+            if done:
+                del self._streams[uid]
+        if self._chain_on_token is not None:
+            self._chain_on_token(uid, tok, done)
+
+    # .. decode stream ..
+    def _feed(self):
+        if self._tok_dev is None:
+            self._tok_dev = jnp.asarray(self.engine._next_tok)
+        return self._tok_dev
+
+    def _dispatch_decode(self) -> _Entry:
+        eng = self.engine
+        # a dispatch-ahead tick writes up to len(pipeline) positions
+        # past the host mirror: make that whole span write-safe first
+        eng._map_tick_pages(len(self._pipeline))
+        toks = self._feed()
+        pmask = jnp.asarray(self._park_mask)
+        ppos = jnp.asarray(self._park_pos)
+        if eng._temp.any() or eng._truncates:
+            tok, eng._keys, eng.cache = self._sampled_tick(
+                eng.params, eng.cache, toks, pmask, ppos,
+                jnp.asarray(eng._temp), eng._keys)
+        else:
+            tok, eng.cache = self._greedy_tick(
+                eng.params, eng.cache, toks, pmask, ppos)
+        self._tok_dev = tok
+        return _Entry(tok, [(s, st.req.uid) for s, st in
+                            eng._active.items()])
+
+    def _process_entry(self, entry: _Entry) -> None:
+        eng = self.engine
+        toks = None if entry.tok_dev is None else np.asarray(entry.tok_dev)
+        for slot, uid in entry.active:
+            st = eng._active.get(slot)
+            if st is None or st.req.uid != uid:
+                continue        # finished/cancelled after this dispatch:
+                                # the in-flight token is discarded
+            eng._pos[slot] += 1
+            eng._emit(slot, int(toks[slot]))
+        for slot, uid, tdev in entry.admits:
+            st = eng._active.get(slot)
+            if st is None or st.req.uid != uid:
+                continue        # cancelled between admission and here
+            eng._emit(slot, int(np.asarray(tdev)[0]))
+
+    # .. prefill stream ..
+    def _pop_ready(self, now: float) -> Request | None:
+        """Next admissible request: drops cancelled heap entries and
+        sheds queued requests whose deadline already passed."""
+        while self._heap:
+            qe = heapq.heappop(self._heap)
+            uid = qe.req.uid
+            if self._status.get(uid) != QUEUED:
+                continue                       # cancelled: lazy delete
+            if qe.deadline is not None and now > qe.deadline:
+                self._queued -= 1
+                self._status[uid] = SHED
+                self._streams.pop(uid, None)
+                self.metrics.shed("deadline")
+                continue
+            self._qe_backout = qe              # for pool-dry re-push
+            self._queued -= 1
+            return qe.req
+        return None
+
+    def _push_back(self) -> None:
+        heapq.heappush(self._heap, self._qe_backout)
+        self._queued += 1
+        self._status[self._qe_backout.req.uid] = QUEUED
+
+    def _admit_loop(self, now: float) -> None:
+        eng = self.engine
+        while eng._free and self._prefill is None:
+            req = self._pop_ready(now)
+            if req is None:
+                return
+            slot = eng._free[-1]
+            if self._chunked:
+                ok = self._start_admission(slot, req)
+            else:
+                ok = eng._admit_one(slot, req)
+                if ok:
+                    eng._free.remove(slot)
+                    self._status[req.uid] = ACTIVE
+                    self.metrics.admitted(req.uid)
+                    if slot in eng._active:   # not done at token one
+                        self._tok_dev = self._feed().at[slot].set(
+                            jnp.int32(int(eng._next_tok[slot])))
+            if not ok:
+                self._push_back()             # pool dry: wait for an EOS
+                return
+            if self._prefill is not None:
+                # a multi-chunk admission paces itself one chunk per
+                # tick from here on; don't start another behind it
+                self._advance_chunk()
+                return
+
+    def _start_admission(self, slot: int, req: Request) -> bool:
+        """Begin split-stream admission: map the prompt's pages (shared
+        prefix + fresh suffix) and either finish immediately (fully
+        cached prompt — one peek dispatch) or park the slot and hand the
+        suffix to the chunk stream."""
+        eng = self.engine
+        pos0 = eng._map_prefix(slot, req)
+        if pos0 is None:
+            return False
+        eng._free.remove(slot)
+        self.metrics.admitted(req.uid)
+        n = len(req.tokens)
+        if pos0 >= n:
+            # fully cached: a read-only peek of the last token's logits
+            view = eng._view(eng.cache["layers"], slot)
+            toks = jnp.asarray([[req.tokens[-1]]], jnp.int32)
+            logits = eng._peek(eng.params, toks, view, n - 1)
+            self._complete_admission(slot, req, logits)
+        else:
+            self._prefill = _Prefill(slot, req, pos0, n)
+            self._status[req.uid] = PREFILL
+            self._park_mask[slot] = True
+            self._park_pos[slot] = pos0
+        return True
+
+    def _advance_chunk(self) -> None:
+        """Dispatch ONE grid-aligned prefill chunk for the admission in
+        flight; the final chunk completes it.  Windows end at absolute
+        multiples of ``self.chunk`` (capped at the block table's reach),
+        so jit compiles once per (window shape, window start) — shared
+        across prompts and match depths on the grid."""
+        pf = self._prefill
+        assert pf is not None
+        eng, req, slot, lo = self.engine, pf.req, pf.slot, pf.lo
+        cap = eng._pps * eng.page_size
+        hi = min((lo // self.chunk + 1) * self.chunk, cap)
+        real_hi = min(hi, pf.n)
+        toks = jnp.asarray(
+            [req.tokens[lo:real_hi]
+             + [eng.pad_id] * (hi - real_hi)], jnp.int32)
+        slot_t = jnp.int32(slot)
+        if real_hi < pf.n:
+            eng.cache["layers"] = self._chunk_mid(
+                eng.params, toks, eng.cache["layers"], slot_t, lo)
+            pf.lo = hi
+            self._park_pos[slot] = hi         # frontier moved
+        else:
+            logits, eng.cache["layers"] = self._chunk_last(
+                eng.params, toks, eng.cache["layers"], slot_t, lo,
+                jnp.asarray(pf.n - 1 - lo, jnp.int32))
+            self._prefill = None
+            self._park_mask[slot] = False
+            self._complete_admission(slot, req, logits)
+
+    def _complete_admission(self, slot: int, req: Request, logits) -> None:
+        """Activate the slot and sample the first token WITHOUT a host
+        sync: the token stays on device (fed to the next decode tick),
+        and its emission rides the pipeline as an admit record."""
+        eng, n = self.engine, len(req.tokens)
+        eng._prefix.insert(
+            req.tokens,
+            [int(p) for p in eng._table[slot, :n // eng.page_size]])
+        eng.cache["pos"] = eng.cache["pos"].at[slot].set(n)
+        eng.cache["start"] = eng.cache["start"].at[slot].set(0)
+        eng._pos[slot] = n
+        eng._active[slot] = _SlotState(req)
+        eng._temp[slot] = req.temperature
+        eng._keys = eng._keys.at[slot].set(
+            jax.random.fold_in(eng._seed_key, req.uid))
+        tok, krow = eng._sampler(
+            logits, eng._keys[slot:slot + 1],
+            jnp.full((1,), req.temperature, jnp.float32))
+        eng._keys = eng._keys.at[slot].set(krow[0])
+        self._tok_dev = self._feed().at[slot].set(tok[0])
+        self._status[req.uid] = ACTIVE
+        record = (slot, req.uid, tok)
+        if self._pipeline:
+            self._pipeline[-1].admits.append(record)
+        else:
+            self._pipeline.append(_Entry(None, [], [record]))
+
+    # .. driving ..
+    def tick(self) -> bool:
+        """One scheduler tick: dispatch the next decode tick (if any
+        slot is decoding), advance the prefill stream by one chunk /
+        admission, then process pipeline entries beyond the allowed
+        in-flight depth.  Returns True while there is (or will be)
+        work."""
+        with self._lock:
+            now = self._clock()
+            eng = self.engine
+            if eng._spec:
+                # speculative fallback: the draft/verify burst is its
+                # own host-synced stream — admission control + metrics
+                # apply, pipelining doesn't
+                self._admit_loop(now)
+                if eng._active:
+                    eng.step()
+                self._gauges()
+                return self.busy
+            dispatched = False
+            if eng._active:
+                self._pipeline.append(self._dispatch_decode())
+                dispatched = True
+            if self._prefill is not None:
+                self._advance_chunk()
+            self._admit_loop(now)
+            limit = self.depth if dispatched else 0
+            while len(self._pipeline) > limit:
+                self._process_entry(self._pipeline.popleft())
+            self._gauges()
+            return self.busy
+
+    def _gauges(self) -> None:
+        self.metrics.set_queue_depth(self._queued,
+                                     len(self.engine._active)
+                                     + (1 if self._prefill else 0))
+
+    def flush(self) -> None:
+        """Drain the pipeline (host-sync every in-flight tick) and block
+        until the device stream is quiet — THE stream-boundary barrier."""
+        with self._lock:
+            while self._pipeline:
+                self._process_entry(self._pipeline.popleft())
+            jax.block_until_ready(self.engine.cache["layers"])
+
+    def run(self) -> dict[int, list[int]]:
+        """Drive until every queued/active request drains, then flush,
+        leak-check, and return ``{uid: emitted tokens}`` (shed and
+        cancelled uids are absent — check ``status``)."""
+        while self.tick():
+            pass
+        self.flush()
+        self.engine.check_leaks()
+        return self.results
+
+    def stats(self) -> dict:
+        """JSON-ready metrics document (see ``ServingMetrics.snapshot``),
+        plus engine page/prefix-cache/spec counters when present."""
+        with self._lock:
+            eng = self.engine
+            extra = {}
+            if eng.page_stats is not None:
+                extra["pages"] = eng.page_stats
+            if eng.prefix_stats is not None:
+                extra["prefix_cache"] = eng.prefix_stats
+            return self.metrics.snapshot(
+                spec_stats=dict(eng.spec_stats) if eng._spec else None,
+                extra=extra or None)

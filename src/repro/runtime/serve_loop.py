@@ -490,6 +490,11 @@ class ServeEngine:
         self._next_tok = np.full((slots,), pad_id, np.int32)
         self._results: dict[int, list[int]] = {}
         self._next_uid = 0
+        # extra per-request page reservation demanded by a pipelined
+        # scheduler: a dispatch-ahead tick can map/write up to this many
+        # positions past prompt+max_new before the host learns a request
+        # finished (PipelinedScheduler sets this to its pipeline depth)
+        self._reserve_slack = 0
 
         # .. speculative decoding ..
         self._spec = draft_model is not None
@@ -594,6 +599,57 @@ class ServeEngine:
         return uid
 
     # .. internals ..
+    def _release_slot(self, slot: int) -> None:
+        """Tear ``slot`` down to refillable: return it to the free list,
+        zero its pos/start/temp mirrors, and drop every page reference
+        it holds (exclusive pages free immediately; prefix-shared pages
+        just lose one holder — the cache's pin keeps them resident).
+        Records NOTHING: ``_emit`` stores the result first on normal
+        completion, while ``cancel`` calls this directly so an aborted
+        request leaves no trace but its freed capacity.  Tolerates a
+        slot that is mid-admission (reserved pages but no ``_active``
+        entry yet — the async scheduler cancels mid-prefill)."""
+        self._active.pop(slot, None)
+        if slot not in self._free:
+            self._free.append(slot)
+        self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+        self.cache["start"] = self.cache["start"].at[slot].set(0)
+        self._pos[slot] = 0
+        self._temp[slot] = 0.0
+        self._next_tok[slot] = self.pad_id
+        if self._spec:
+            self._dcache["pos"] = self._dcache["pos"].at[slot].set(0)
+            self._dcache["start"] = (
+                self._dcache["start"].at[slot].set(0))
+        if self.cache_kind == "paged":
+            for pid in self._slot_pages.pop(slot, ()):
+                self._alloc.release(pid)
+            for pid in self._slot_shared.pop(slot, ()):
+                self._alloc.release(pid)
+            self._slot_reserved.pop(slot, None)
+            self._table[slot] = 0
+            self.cache["layers"] = self._release(
+                self.cache["layers"], slot)
+
+    def cancel(self, uid: int) -> bool:
+        """Abort ``uid`` wherever it is — queued (dropped) or active
+        (slot, pages, and prefix-cache pins released via
+        ``_release_slot``); no result is recorded either way.  Valid at
+        any tick boundary: the next decode tick simply sees one more
+        free slot (an in-flight write for the old occupant lands before
+        the release's zeroing in device-dispatch order, so it can never
+        outlive the teardown).  Returns False for unknown or
+        already-finished uids."""
+        for i, req in enumerate(self._queue):
+            if req.uid == uid:
+                del self._queue[i]
+                return True
+        for slot, st in list(self._active.items()):
+            if st.req.uid == uid:
+                self._release_slot(slot)
+                return True
+        return False
+
     def _emit(self, slot: int, tok: int) -> bool:
         """Record one sampled token; returns True if the request finished."""
         st = self._active[slot]
@@ -605,28 +661,7 @@ class ServeEngine:
             self.on_token(st.req.uid, tok, done)
         if done:
             self._results[st.req.uid] = st.emitted
-            del self._active[slot]
-            self._free.append(slot)
-            self.cache["pos"] = self.cache["pos"].at[slot].set(0)
-            self.cache["start"] = self.cache["start"].at[slot].set(0)
-            self._pos[slot] = 0
-            self._temp[slot] = 0.0
-            if self._spec:
-                self._dcache["pos"] = self._dcache["pos"].at[slot].set(0)
-                self._dcache["start"] = (
-                    self._dcache["start"].at[slot].set(0))
-            if self.cache_kind == "paged":
-                # drop every page reference the slot holds: exclusive
-                # pages free immediately; prefix-shared pages just lose
-                # one holder (the cache's pin keeps them resident)
-                for pid in self._slot_pages.pop(slot, ()):
-                    self._alloc.release(pid)
-                for pid in self._slot_shared.pop(slot, ()):
-                    self._alloc.release(pid)
-                self._slot_reserved.pop(slot, None)
-                self._table[slot] = 0
-                self.cache["layers"] = self._release(
-                    self.cache["layers"], slot)
+            self._release_slot(slot)
         else:
             self._next_tok[slot] = tok
         return done
@@ -635,9 +670,10 @@ class ServeEngine:
         """Worst-case pages one request can touch: positions
         [0, prompt + max_new), plus ``spec_k`` speculative positions
         (a verify burst writes up to ``spec_k`` rows past the last
-        committed token, and rollback keeps them mapped), capped at the
-        per-slot table length."""
-        extra = self.spec_k if self._spec else 0
+        committed token, and rollback keeps them mapped), plus any
+        pipeline ``_reserve_slack`` (dispatch-ahead ticks overshoot the
+        same way), capped at the per-slot table length."""
+        extra = (self.spec_k if self._spec else 0) + self._reserve_slack
         return min(-(-(prompt_len + max_new + extra) // self.page_size),
                    self._pps)
 
@@ -879,6 +915,39 @@ class ServeEngine:
             self._queue.popleft()
             self._free.remove(slot)
 
+    def _map_tick_pages(self, span: int = 0) -> None:
+        """Make positions ``[pos, pos+span]`` write-safe for every active
+        slot before a decode-family dispatch: map each still-null page in
+        that range (one grab at a time from the slot's own reservation —
+        positions are host-mirrored, so this never syncs on the device)
+        and run the copy-on-write gate over it, so no write can land on
+        an unmapped page or on a page another holder still references.
+        All of a tick's table changes push as ONE table dispatch.
+
+        ``span=0`` is the plain decode tick (the next token's position);
+        a speculative tick passes ``tick_k`` (the verify burst writes
+        that far ahead); the pipelined scheduler passes its dispatch
+        depth, because a tick dispatched before the previous one is
+        processed writes one position past the host mirror."""
+        if self.cache_kind != "paged":
+            return
+        dirty = False
+        for slot in self._active:
+            p = int(self._pos[slot])
+            hi = min(p + span, self.max_len - 1)
+            for pp in range(p // self.page_size,
+                            min(hi // self.page_size, self._pps - 1) + 1):
+                if self._table[slot, pp] == 0:
+                    pid = self._take_pages(1)[0]
+                    self._slot_pages[slot].append(pid)
+                    self._table[slot, pp] = pid
+                    dirty = True
+            if self._prefix is not None:
+                dirty |= self._cow(slot, p, hi)
+        if dirty:
+            self.cache["layers"] = self._set_tables(
+                self.cache["layers"], jnp.asarray(self._table))
+
     # .. driving ..
     def step(self) -> bool:
         """Admit newcomers, then one batched decode tick + one batched
@@ -892,30 +961,7 @@ class ServeEngine:
             return bool(self._queue)
         if self._spec:
             return self._spec_tick()
-        if self.cache_kind == "paged":
-            # slots writing their next token past a page boundary each
-            # grab one page from their reservation (positions are
-            # host-mirrored, so this never syncs on the device); all the
-            # boundary crossings of a tick push as ONE table dispatch.
-            # Writes into a still-shared page go through the CoW gate
-            # first — the token write must never touch another holder's
-            # bytes.
-            dirty = False
-            for slot in self._active:
-                p = int(self._pos[slot])
-                pp = p // self.page_size
-                if self._table[slot, pp] == 0:
-                    pid = self._take_pages(1)[0]
-                    self._slot_pages[slot].append(pid)
-                    self._table[slot, pp] = pid
-                    dirty = True
-                elif (self._prefix is not None
-                      and self._alloc.refcount(
-                          int(self._table[slot, pp])) > 1):
-                    dirty |= self._cow(slot, p, p)
-            if dirty:
-                self.cache["layers"] = self._set_tables(
-                    self.cache["layers"], jnp.asarray(self._table))
+        self._map_tick_pages()
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self._next_tok))
         self._pos += 1     # decode_step advances every slot's pos
@@ -941,28 +987,12 @@ class ServeEngine:
         # max_len-1, so tick_k >= 1 always)
         max_pos = max(int(self._pos[s]) for s in active)
         tick_k = min(self.spec_k, self.max_len - 1 - max_pos)
-        if self.cache_kind == "paged":
-            # map every page the burst can touch up front (from each
-            # slot's reservation): the verify write must never land on
-            # an unmapped (null) page — and, with prefix sharing, never
-            # on a page another holder still references (a rolled-back
-            # burst would scribble on the shared prompt), so the whole
-            # burst range runs through the CoW gate
-            dirty = False
-            for slot in active:
-                p = int(self._pos[slot])
-                for pp in range(p // self.page_size,
-                                (p + tick_k) // self.page_size + 1):
-                    if self._table[slot, pp] == 0:
-                        pid = self._take_pages(1)[0]
-                        self._slot_pages[slot].append(pid)
-                        self._table[slot, pp] = pid
-                        dirty = True
-                if self._prefix is not None:
-                    dirty |= self._cow(slot, p, p + tick_k)
-            if dirty:
-                self.cache["layers"] = self._set_tables(
-                    self.cache["layers"], jnp.asarray(self._table))
+        # map every page the burst can touch up front (from each slot's
+        # reservation) and CoW-clear the whole burst range: the verify
+        # write must never land on an unmapped (null) page, nor — with
+        # prefix sharing — on a page another holder still references (a
+        # rolled-back burst would scribble on the shared prompt)
+        self._map_tick_pages(tick_k)
 
         drafts, burst, dc, snaps = self._draft(
             self.draft_params, self._dcache, jnp.asarray(self._next_tok),

@@ -1,0 +1,117 @@
+"""Elastic control logic: remesh planning after host loss, straggler
+detection/backfill, and heartbeat bookkeeping — simulated populations,
+no real multi-host setup (see runtime/elastic.py module doc)."""
+
+import pytest
+
+from repro.runtime.elastic import (HealthMonitor, StragglerPolicy,
+                                   plan_remesh)
+
+
+class TestPlanRemesh:
+    def test_full_fleet_keeps_model_axis(self):
+        plan = plan_remesh(4, [0, 1, 2, 3], model_parallel=4,
+                           global_batch=64, devices_per_host=4)
+        assert plan.model_parallel == 4
+        assert plan.data_parallel == 4          # 16 devices / tp4
+        assert plan.world_size == 16
+        assert plan.active_hosts == (0, 1, 2, 3)
+        assert plan.batch_per_host == 16
+
+    def test_host_loss_shrinks_data_axis_pow2(self):
+        plan = plan_remesh(4, [0, 2, 3], model_parallel=4,
+                           global_batch=64, devices_per_host=4)
+        # 12 devices / tp4 = 3 -> largest runnable pow2 data axis is 2
+        assert plan.data_parallel == 2
+        assert plan.model_parallel == 4
+        assert plan.world_size == 8
+
+    def test_shard_assignment_is_dense_over_survivors(self):
+        plan = plan_remesh(4, [1, 3], model_parallel=2,
+                           global_batch=32, devices_per_host=4)
+        # survivors adopt shard indices 0..k-1 (sorted host order) so the
+        # deterministic data stream and checkpoint shards stay aligned
+        used = plan.active_hosts
+        assert plan.shard_assignment == {h: i for i, h in enumerate(used)}
+        assert sorted(plan.shard_assignment.values()) == list(
+            range(len(used)))
+
+    def test_data_axis_must_divide_global_batch(self):
+        plan = plan_remesh(4, [0, 1, 2, 3], model_parallel=2,
+                           global_batch=12, devices_per_host=4)
+        # max_dp = 8 but 12 % 8 != 0: dp stops at 4 (12 % 4 == 0)
+        assert plan.data_parallel == 4
+
+    def test_too_few_devices_raises(self):
+        with pytest.raises(RuntimeError, match="cannot remesh"):
+            plan_remesh(4, [0], model_parallel=8, global_batch=64,
+                        devices_per_host=4)
+
+
+class TestStragglerPolicy:
+    def test_needs_min_observations(self):
+        pol = StragglerPolicy(min_observations=8)
+        times = {h: 1.0 for h in range(4)}
+        times[3] = 100.0
+        assert not pol.is_straggler(times, 3)
+
+    def test_deadline_factor_vs_median(self):
+        pol = StragglerPolicy(deadline_factor=3.0, min_observations=8)
+        times = {h: 1.0 for h in range(8)}
+        times[7] = 3.5
+        assert pol.is_straggler(times, 7)
+        times[7] = 2.5                       # under 3x median: healthy
+        assert not pol.is_straggler(times, 7)
+
+    def test_backfill_mapping_is_deterministic_buddy(self):
+        # sorted stragglers round-robin onto healthy hosts — every host
+        # derives the same map from the shared failure signal: the i-th
+        # sorted straggler's shard goes to healthy[i % len(healthy)]
+        pol = StragglerPolicy(mode="backfill")
+        assert pol.reassign([5, 2, 9], [0, 1]) == {0: 9, 1: 5}
+        assert pol.reassign([4], [0, 1, 2]) == {0: 4}
+
+    def test_skip_mode_and_no_healthy_hosts(self):
+        assert StragglerPolicy(mode="skip").reassign([1], [0]) == {}
+        assert StragglerPolicy(mode="backfill").reassign([1], []) == {}
+
+
+class TestHealthMonitor:
+    def test_alive_dead_partition_with_pinned_clock(self):
+        mon = HealthMonitor(timeout_s=10.0)
+        mon.beat(0, now=100.0)
+        mon.beat(1, now=95.0)
+        mon.beat(2, now=80.0)                # stale
+        hosts = [0, 1, 2, 3]                 # 3 never beat
+        assert mon.alive(hosts, now=100.0) == [0, 1]
+        assert mon.dead(hosts, now=100.0) == [2, 3]
+
+    def test_rebeat_revives(self):
+        mon = HealthMonitor(timeout_s=5.0)
+        mon.beat(0, now=0.0)
+        assert mon.dead([0], now=10.0) == [0]
+        mon.beat(0, now=10.0)
+        assert mon.alive([0], now=10.0) == [0]
+
+
+def test_remesh_feeds_straggler_policy_end_to_end():
+    """Failure -> remesh -> straggler backfill on the shrunken fleet:
+    the three pieces compose without any shared mutable state."""
+    mon = HealthMonitor(timeout_s=10.0)
+    for h in range(4):
+        mon.beat(h, now=0.0)
+    mon.beat(0, now=50.0)
+    mon.beat(1, now=50.0)
+    mon.beat(2, now=50.0)                    # host 3 died
+    alive = mon.alive([0, 1, 2, 3], now=55.0)
+    plan = plan_remesh(4, alive, model_parallel=4, global_batch=32,
+                       devices_per_host=4)
+    assert plan.world_size <= len(alive) * 4
+    pol = StragglerPolicy(min_observations=3)
+    times = {h: 1.0 for h in alive}          # step times from every survivor
+    slow = plan.active_hosts[-1]
+    times[slow] = 10.0
+    assert pol.is_straggler(times, slow)
+    healthy = [h for h in plan.active_hosts if h != slow]
+    extra = pol.reassign([slow], healthy)
+    assert set(extra.values()) == {slow}

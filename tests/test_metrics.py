@@ -1,0 +1,136 @@
+"""Serving metrics layer: histogram percentiles over a sliding window,
+request-lifecycle accounting (TTFT / inter-token gaps), shed counters,
+and snapshot shape — all with a pinned fake clock, no device work."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.runtime.metrics import LatencyHistogram, ServingMetrics
+
+
+class TestLatencyHistogram:
+    def test_empty(self):
+        h = LatencyHistogram()
+        assert h.percentile(50) is None
+        assert h.mean_us is None
+        snap = h.snapshot()
+        assert snap == {"count": 0, "mean_us": None,
+                        "p50_us": None, "p99_us": None}
+
+    def test_exact_percentiles(self):
+        h = LatencyHistogram()
+        for ms in range(1, 101):            # 1..100 ms
+            h.record(ms / 1e3)
+        assert h.percentile(50) == pytest.approx(
+            float(np.percentile(np.arange(1, 101), 50)) * 1e3)
+        assert h.percentile(99) == pytest.approx(
+            float(np.percentile(np.arange(1, 101), 99)) * 1e3)
+        assert h.mean_us == pytest.approx(50.5e3)
+
+    def test_window_slides_but_lifetime_counts_dont(self):
+        h = LatencyHistogram(window=4)
+        for s in [1.0, 1.0, 1.0, 1.0, 9.0, 9.0, 9.0, 9.0]:
+            h.record(s)
+        # window holds only the four 9s; count/mean stay lifetime
+        assert h.percentile(50) == pytest.approx(9e6)
+        assert h.count == 8
+        assert h.mean_us == pytest.approx(5e6)
+
+    def test_bad_window_raises(self):
+        with pytest.raises(ValueError, match="window"):
+            LatencyHistogram(window=0)
+
+    def test_thread_safe_record(self):
+        h = LatencyHistogram(window=64)
+
+        def pound():
+            for _ in range(500):
+                h.record(0.001)
+
+        ts = [threading.Thread(target=pound) for _ in range(4)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert h.count == 2000
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+class TestServingMetrics:
+    def test_ttft_and_itl_split(self):
+        clk = FakeClock()
+        m = ServingMetrics(clock=clk)
+        m.submitted(1)
+        clk.t += 0.5                        # 500ms to first token
+        m.token(1)
+        clk.t += 0.01
+        m.token(1)
+        clk.t += 0.03
+        m.token(1)
+        m.finished(1)
+        assert m.ttft.count == 1
+        assert m.ttft.percentile(50) == pytest.approx(0.5e6)
+        assert m.itl.count == 2
+        assert m.itl.percentile(50) == pytest.approx(0.02e6)
+
+    def test_queue_wait_recorded_at_admission(self):
+        clk = FakeClock()
+        m = ServingMetrics(clock=clk)
+        m.submitted(7)
+        clk.t += 2.0
+        m.admitted(7)
+        assert m.queue_wait.percentile(50) == pytest.approx(2e6)
+
+    def test_shed_by_reason_and_totals(self):
+        m = ServingMetrics()
+        m.shed("queue_full")
+        m.shed("queue_full")
+        m.shed("deadline")
+        assert m.shed_total == 3
+        snap = m.snapshot()
+        assert snap["requests"]["shed"] == 3
+        assert snap["requests"]["shed_by_reason"] == {
+            "queue_full": 2, "deadline": 1}
+
+    def test_cancelled_removes_live_request(self):
+        clk = FakeClock()
+        m = ServingMetrics(clock=clk)
+        m.submitted(3)
+        m.token(3)
+        m.cancelled(3)
+        m.token(3)                          # raced-out token: ignored
+        snap = m.snapshot()
+        assert snap["requests"]["cancelled"] == 1
+        assert snap["requests"]["in_flight"] == 0
+        assert snap["tokens"]["emitted"] == 1
+
+    def test_tokens_per_s_and_queue_gauges(self):
+        clk = FakeClock()
+        m = ServingMetrics(clock=clk)
+        m.submitted(1)
+        for _ in range(10):
+            clk.t += 0.1
+            m.token(1)
+        m.finished(1)
+        assert m.tokens_per_s() == pytest.approx(10.0)
+        m.set_queue_depth(5, active=2)
+        m.set_queue_depth(1, active=1)
+        snap = m.snapshot()
+        assert snap["queue"] == {"depth": 1, "depth_peak": 5,
+                                 "active_slots": 1}
+
+    def test_spec_stats_acceptance_weighting(self):
+        m = ServingMetrics()
+        snap = m.snapshot(spec_stats={"ticks": 4, "drafted": 8,
+                                      "accepted": 6, "emitted": 10})
+        assert snap["spec_decode"]["acceptance"] == pytest.approx(0.75)
+        snap = m.snapshot(spec_stats={"ticks": 0, "drafted": 0,
+                                      "accepted": 0, "emitted": 0})
+        assert snap["spec_decode"]["acceptance"] is None

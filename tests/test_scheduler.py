@@ -1,0 +1,281 @@
+"""PipelinedScheduler: bit-identity with the synchronous engine across
+backends (paged+prefix chunked admission, dense atomic admission,
+speculative fallback), admission-control policies (shed/priority/
+deadline), and cancellation at every pipeline stage with a clean
+allocator leak check."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models.transformer import build_model
+from repro.runtime.metrics import ServingMetrics
+from repro.runtime.scheduler import (ACTIVE, CANCELLED, DONE, PREFILL,
+                                     QUEUED, SHED, PipelinedScheduler)
+from repro.runtime.serve_loop import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced_config(get_config("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n, *, prefix_len=6, seed=11, temps=(0.0, 0.9)):
+    """Deterministic ragged request set sharing a common prefix."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size, prefix_len).tolist()
+    out = []
+    for i in range(n):
+        tail = rng.integers(1, cfg.vocab_size, int(rng.integers(2, 8)))
+        out.append((prefix + tail.tolist(), 6, temps[i % len(temps)]))
+    return out
+
+
+def _sync_reference(model, params, reqs, **engine_kw):
+    eng = ServeEngine(model, params, **engine_kw)
+    for toks, mx, temp in reqs:
+        eng.submit(toks, max_new_tokens=mx, temperature=temp)
+    return eng.run()
+
+
+class TestBitIdentity:
+    """The pipelined scheduler must emit the exact token streams of the
+    synchronous ``ServeEngine.run`` — same jits, same sampler keys."""
+
+    def test_paged_prefix_chunked_matches_sync(self, tiny):
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=64, seed=5, top_k=8)
+        reqs = _requests(cfg, 6)
+        ref = _sync_reference(model, params, reqs, **kw)
+
+        eng = ServeEngine(model, params, **kw)
+        sched = PipelinedScheduler(eng, pipeline_depth=2, prefill_chunk=4)
+        for toks, mx, temp in reqs:
+            assert sched.submit(toks, max_new_tokens=mx,
+                                temperature=temp) is not None
+        got = sched.run()
+        assert got == ref
+        assert all(sched.status(u) == DONE for u in got)
+
+    def test_dense_backend_matches_sync(self, tiny):
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=48, seed=5, cache_kind="dense")
+        reqs = _requests(cfg, 4, temps=(0.0,))
+        ref = _sync_reference(model, params, reqs, **kw)
+
+        eng = ServeEngine(model, params, **kw)
+        sched = PipelinedScheduler(eng, pipeline_depth=1)
+        for toks, mx, temp in reqs:
+            sched.submit(toks, max_new_tokens=mx, temperature=temp)
+        assert sched.run() == ref
+
+    def test_depth_zero_is_synchronous_processing(self, tiny):
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=64, seed=5)
+        reqs = _requests(cfg, 3)
+        ref = _sync_reference(model, params, reqs, **kw)
+
+        eng = ServeEngine(model, params, **kw)
+        sched = PipelinedScheduler(eng, pipeline_depth=0, prefill_chunk=4)
+        for toks, mx, temp in reqs:
+            sched.submit(toks, max_new_tokens=mx, temperature=temp)
+        assert sched.run() == ref
+
+    def test_spec_fallback_matches_sync(self, tiny):
+        """Speculative engines tick through engine.step() (the verify
+        burst is the decode stream) — depth is forced to 0 and streams
+        still match the sync spec engine bit for bit."""
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=64, seed=5, draft_model=model,
+                  draft_params=params, spec_k=2)
+        reqs = _requests(cfg, 4, temps=(0.0,))
+        ref = _sync_reference(model, params, reqs, **kw)
+
+        eng = ServeEngine(model, params, **kw)
+        sched = PipelinedScheduler(eng, pipeline_depth=3)
+        assert sched.depth == 0
+        for toks, mx, temp in reqs:
+            sched.submit(toks, max_new_tokens=mx, temperature=temp)
+        assert sched.run() == ref
+        assert eng.spec_stats["accepted"] > 0
+
+    def test_tight_pool_reserve_slack(self, tiny):
+        """Dispatch-ahead ticks overshoot reservations by pipeline_depth
+        positions: on a page pool too small to hold every request at
+        once, admission must back off (never corrupt a neighbour's
+        page) and streams stay bit-identical."""
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=48, seed=5, page_size=4, pages=9)
+        reqs = _requests(cfg, 5, prefix_len=4)
+        ref = _sync_reference(model, params, reqs, **kw)
+
+        eng = ServeEngine(model, params, **kw)
+        sched = PipelinedScheduler(eng, pipeline_depth=2, prefill_chunk=4)
+        assert eng._reserve_slack == 2
+        for toks, mx, temp in reqs:
+            assert sched.submit(toks, max_new_tokens=mx,
+                                temperature=temp) is not None
+        assert sched.run() == ref
+
+
+class TestCancellation:
+    def test_cancel_at_every_tick_leaks_clean(self, tiny):
+        """Cancel one request at every pipeline stage (queued, parked
+        mid-prefill, decoding, with in-flight dispatched ticks) while
+        the rest keep serving; the allocator leak check must stay clean
+        and survivors' streams must match the sync engine."""
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=64, seed=5)
+        reqs = _requests(cfg, 6)
+        ref = _sync_reference(model, params, reqs, **kw)
+
+        eng = ServeEngine(model, params, **kw)
+        sched = PipelinedScheduler(eng, pipeline_depth=2, prefill_chunk=4)
+        uids = [sched.submit(t, max_new_tokens=m, temperature=tp)
+                for t, m, tp in reqs]
+        cancel_at = {uids[1]: 0, uids[3]: 2, uids[4]: 5}
+        tick = 0
+        while sched.tick():
+            for uid, at in cancel_at.items():
+                if at == tick:
+                    sched.cancel(uid)
+                    eng.check_leaks()        # frees landed immediately
+            tick += 1
+        sched.flush()
+        eng.check_leaks()
+        got = sched.results
+        for uid in uids:
+            if sched.status(uid) == DONE:
+                assert got[uid] == ref[uid]
+            else:
+                assert sched.status(uid) == CANCELLED
+                assert uid not in got
+        assert any(sched.status(u) == DONE for u in uids)
+        assert sched.metrics.cancelled_total == sum(
+            sched.status(u) == CANCELLED for u in uids)
+
+    def test_cancel_mid_prefill_releases_slot(self, tiny):
+        cfg, model, params = tiny
+        rng = np.random.default_rng(3)
+        eng = ServeEngine(model, params, slots=1, max_len=64, seed=5)
+        sched = PipelinedScheduler(eng, prefill_chunk=4)
+        long_prompt = rng.integers(1, cfg.vocab_size, 20).tolist()
+        uid = sched.submit(long_prompt, max_new_tokens=4)
+        sched.tick()                         # admission starts, slot parks
+        assert sched.status(uid) == PREFILL
+        assert sched.cancel(uid)
+        assert not sched.cancel(uid)         # already terminal
+        sched.flush()
+        eng.check_leaks()
+        assert len(eng._free) == 1           # slot returned to the pool
+        # the freed slot serves a new request end to end
+        uid2 = sched.submit(long_prompt[:6], max_new_tokens=3)
+        res = sched.run()
+        assert len(res[uid2]) == 3
+
+    def test_cancel_queued_and_unknown(self, tiny):
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=1, max_len=32, seed=5)
+        sched = PipelinedScheduler(eng, prefill_chunk=4)
+        toks = [1, 2, 3]
+        a = sched.submit(toks, max_new_tokens=2)
+        b = sched.submit(toks, max_new_tokens=2)
+        assert sched.cancel(b)               # still queued
+        assert not sched.cancel(9999)        # unknown uid
+        res = sched.run()
+        assert a in res and b not in res
+        assert sched.status(b) == CANCELLED
+
+
+class TestAdmissionControl:
+    def test_queue_full_sheds_with_none(self, tiny):
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=1, max_len=32, seed=5)
+        sched = PipelinedScheduler(eng, max_queue=1, prefill_chunk=4)
+        assert sched.submit([1, 2], max_new_tokens=2) is not None
+        assert sched.submit([3, 4], max_new_tokens=2) is None
+        assert sched.metrics.shed_counts == {"queue_full": 1}
+        sched.run()
+
+    def test_priority_orders_admission(self, tiny):
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=1, max_len=48, seed=5)
+        sched = PipelinedScheduler(eng, prefill_chunk=4)
+        first_token_order = []
+        toks = [5, 6, 7, 8]
+
+        def watcher(uid):
+            def cb(tok, done):
+                if uid not in first_token_order:
+                    first_token_order.append(uid)
+            return cb
+
+        a = sched.submit(toks, max_new_tokens=3, priority=1,
+                         on_token=watcher("a"))
+        b = sched.submit(toks, max_new_tokens=3, priority=5,
+                         on_token=watcher("b"))
+        c = sched.submit(toks, max_new_tokens=3, priority=0,
+                         on_token=watcher("c"))
+        sched.run()
+        assert first_token_order == ["c", "a", "b"]
+        assert {sched.status(u) for u in (a, b, c)} == {DONE}
+
+    def test_deadline_sheds_stale_queued_request(self, tiny):
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=1, max_len=48, seed=5)
+        sched = PipelinedScheduler(eng, prefill_chunk=4)
+        a = sched.submit([1, 2, 3, 4], max_new_tokens=8)
+        b = sched.submit([5, 6, 7, 8], max_new_tokens=2, deadline=0.0)
+        res = sched.run()
+        assert sched.status(a) == DONE and len(res[a]) == 8
+        assert sched.status(b) == SHED and b not in res
+        assert sched.metrics.shed_counts.get("deadline") == 1
+
+    def test_constructor_validation(self, tiny):
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=1, max_len=32, seed=5)
+        with pytest.raises(ValueError, match="pipeline_depth"):
+            PipelinedScheduler(eng, pipeline_depth=-1)
+        with pytest.raises(ValueError, match="max_queue"):
+            PipelinedScheduler(eng, max_queue=0)
+        eng.submit([1, 2], max_new_tokens=1)
+        with pytest.raises(ValueError, match="idle"):
+            PipelinedScheduler(eng)
+
+
+class TestMetricsWiring:
+    def test_lifecycle_counts_and_latency_sections(self, tiny):
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=2, max_len=64, seed=5)
+        metrics = ServingMetrics()
+        sched = PipelinedScheduler(eng, pipeline_depth=1, prefill_chunk=4,
+                                   metrics=metrics)
+        reqs = _requests(cfg, 4, temps=(0.0,))
+        for toks, mx, temp in reqs:
+            sched.submit(toks, max_new_tokens=mx, temperature=temp)
+        res = sched.run()
+        total = sum(len(v) for v in res.values())
+        snap = sched.stats()
+        assert snap["requests"]["submitted"] == 4
+        assert snap["requests"]["finished"] == 4
+        assert snap["requests"]["in_flight"] == 0
+        assert snap["tokens"]["emitted"] == total
+        assert snap["ttft"]["count"] == 4
+        assert snap["inter_token"]["count"] == total - 4
+        assert snap["ttft"]["p99_us"] >= snap["ttft"]["p50_us"]
+        assert "pages" in snap and "prefix_cache" in snap
+
+    def test_status_transitions(self, tiny):
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=1, max_len=48, seed=5)
+        sched = PipelinedScheduler(eng, prefill_chunk=4)
+        uid = sched.submit(list(range(1, 11)), max_new_tokens=2)
+        assert sched.status(uid) == QUEUED
+        sched.tick()
+        assert sched.status(uid) in (PREFILL, ACTIVE)
+        sched.run()
+        assert sched.status(uid) == DONE
