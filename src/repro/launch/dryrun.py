@@ -79,15 +79,15 @@ def _compile_once(arch, shape_name, mesh, cfg=None, tcfg=None,
                        kv_quant=kv_quant, moe_rank_major=moe_rank_major)
     step, args, kind = spec[0], spec[1], spec[2]
     in_sh = shardings_for(kind, args, mesh, profile)
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         jitted = jax.jit(
             step, in_shardings=in_sh,
             donate_argnums=((0, 1) if kind in ("train", "decode") else ()))
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
     return compiled, kind, t_lower, t_compile
 
 

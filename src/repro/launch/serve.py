@@ -34,16 +34,37 @@ from repro.quant.quantize import quantize_params
 from repro.runtime.serve_loop import ServeEngine, generate
 
 
+def _resolve_plan(spec: str):
+    """--fault-plan value -> FaultPlan: a registered name ("ci-chaos")
+    or "seeded:<n>" for a deterministic randomized plan."""
+    from repro.runtime.faults import FaultPlan
+
+    if spec.startswith("seeded:"):
+        return FaultPlan.seeded(int(spec.split(":", 1)[1]))
+    return FaultPlan.named(spec)
+
+
 def _serve_http(args, cfg, engine) -> None:
     """--http: scheduler + SSE server; --http-smoke runs the scripted
-    client (one streamed completion, /metrics, clean shutdown)."""
+    client (one streamed completion, /metrics, clean shutdown) —
+    under the --fault-plan chaos plan when one is given."""
     from repro.runtime.scheduler import PipelinedScheduler
     from repro.runtime.server import ServingServer
 
+    plan = _resolve_plan(args.fault_plan) if args.fault_plan else None
+    retries = args.max_retries
+    if plan is not None and retries == 0:
+        retries = 3     # a chaos plan without a retry budget just dies
+        print(f"fault plan {plan.name or '<seeded>'} active: "
+              f"defaulting --max-retries to {retries}")
     sched = PipelinedScheduler(engine, pipeline_depth=args.pipeline_depth,
                                max_queue=args.max_queue,
-                               prefill_chunk=args.prefill_chunk or None)
+                               prefill_chunk=args.prefill_chunk or None,
+                               max_retries=retries,
+                               watchdog_timeout=args.watchdog or None)
     srv = ServingServer(sched, host=args.host, port=args.port)
+    if plan is not None:
+        plan.activate()
     host, port = srv.start()
     print(f"serving http://{host}:{port} "
           f"(backend={engine.cache_kind}, slots={engine.slots}, "
@@ -53,6 +74,9 @@ def _serve_http(args, cfg, engine) -> None:
             srv.serve_forever()
         except KeyboardInterrupt:
             srv.stop()
+        finally:
+            if plan is not None:
+                plan.deactivate()
         return
 
     import http.client
@@ -75,18 +99,34 @@ def _serve_http(args, cfg, engine) -> None:
     assert streamed == events[-1]["tokens"], "stream/final token mismatch"
 
     conn = http.client.HTTPConnection(host, port, timeout=60)
+    conn.request("GET", "/healthz")
+    hz = conn.getresponse()
+    assert hz.status == 200, f"healthz: HTTP {hz.status}"
+    hz.read()
     conn.request("GET", "/metrics")
     m = json.loads(conn.getresponse().read())
     conn.close()
     assert m["leaks_clean"], "allocator leak after completion"
     assert m["requests"]["finished"] == 1
+    if plan is not None:
+        fired = plan.fired
+        assert fired, "fault plan active but no fault fired"
+        assert m["faults"]["quarantined"] == 0, \
+            f"chaos smoke quarantined a request: {sched.errors}"
+        assert m["faults"]["total"] == len(fired)
 
     srv.stop()
+    if plan is not None:
+        plan.deactivate()
     engine.check_leaks()
     ttft, itl = m["ttft"], m["inter_token"]
+    chaos = ""
+    if plan is not None:
+        chaos = (f", {len(fired)} faults injected "
+                 f"({m['faults']['retries']} retries, all recovered)")
     print(f"http smoke: {len(streamed)} tokens streamed, "
           f"ttft p50 {ttft['p50_us']}us, itl p50 {itl['p50_us']}us / "
-          f"p99 {itl['p99_us']}us, 0 leaks")
+          f"p99 {itl['p99_us']}us, 0 leaks{chaos}")
 
 
 def main():
@@ -152,9 +192,23 @@ def main():
     ap.add_argument("--http-smoke", action="store_true",
                     help="scripted client against the live server, then "
                          "clean shutdown + leak check (CI smoke)")
+    ap.add_argument("--fault-plan", default="",
+                    help="chaos testing: activate a deterministic fault "
+                         "plan — a registered name (e.g. 'ci-chaos') or "
+                         "'seeded:<n>' (needs --http)")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="fault tolerance: per-request retry budget; any "
+                         "nonzero value turns on snapshot/rollback ticks "
+                         "(defaults to 3 when --fault-plan is set)")
+    ap.add_argument("--watchdog", type=float, default=0.0,
+                    help="fault tolerance: per-tick watchdog timeout in "
+                         "seconds (0 = off)")
     envmod.add_env_args(ap)
     args = ap.parse_args()
     envmod.apply_env_args(args)
+    if args.fault_plan and not args.http:
+        ap.error("--fault-plan needs --http: only the fault-tolerant "
+                 "scheduler can recover from injected faults")
     chunk = args.prefill_chunk or None
     top_k = args.top_k or None
     top_p = args.top_p or None
@@ -165,9 +219,9 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     if args.quantize:
-        t0 = time.time()
+        t0 = time.perf_counter()
         params = quantize_params(params, QuantConfig(enabled=True))
-        print(f"EN-T encode (once): {time.time()-t0:.2f}s")
+        print(f"EN-T encode (once): {time.perf_counter()-t0:.2f}s")
 
     rng = np.random.default_rng(0)
 
@@ -204,14 +258,14 @@ def main():
                                   args.shared_prefix).tolist()
         lens = rng.integers(max(1, args.prompt_len // 2),
                             args.prompt_len + 1, n_req)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for n in lens:
             engine.submit(
                 sys_prompt + rng.integers(0, cfg.vocab_size, int(n)).tolist(),
                 max_new_tokens=args.steps,
                 temperature=args.temperature)
         results = engine.run()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         total = sum(len(v) for v in results.values())
         print(f"engine[{engine.cache_kind}]: served {n_req} ragged requests "
               f"(prompt lens {lens.min()}..{lens.max()}) on {slots} slots: "
@@ -245,13 +299,13 @@ def main():
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
         jnp.int32)
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = generate(model, params, prompts, steps=args.steps,
                    temperature=args.temperature, prefill_chunk=chunk,
                    top_k=top_k, top_p=top_p,
                    cache_kind=None if args.cache_kind == "auto"
                    else args.cache_kind)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"generated {args.batch}x{args.steps} tokens in {dt:.2f}s "
           f"({args.batch*args.steps/dt:.1f} tok/s)")
     print("sample:", np.asarray(out)[0, :16].tolist())

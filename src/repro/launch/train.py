@@ -107,12 +107,12 @@ def main():
         times = {}
         try:
             for s in range(start, args.steps):
-                t0 = time.time()
+                t0 = time.perf_counter()
                 batch = {k: jax.device_put(jnp.asarray(v), bspec)
                          for k, v in pf.next().items()}
                 params, opt, m = step_fn(params, opt, batch)
                 monitor.beat(0)
-                times[0] = time.time() - t0
+                times[0] = time.perf_counter() - t0
                 if (s + 1) % args.log_every == 0:
                     tok_s = args.batch * args.seq / max(times[0], 1e-9)
                     print(f"step {s+1:5d} loss {float(m['loss']):.4f} "

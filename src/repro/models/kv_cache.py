@@ -175,6 +175,17 @@ class CacheSlots:
         del slot
         return self
 
+    def clone(self):
+        """Deep device copy of every array leaf — the SNAPSHOT view.
+
+        The serving jits donate their cache arguments (in-place pool
+        updates), which invalidates the donated buffers: a snapshot that
+        merely aliased the live leaves would die with the first
+        post-snapshot tick.  ``clone`` materializes fresh buffers, so
+        ``ServeEngine.snapshot()/restore()`` can roll a failed tick back
+        to the last consistent boundary any number of times."""
+        return jax.tree.map(jnp.copy, self)
+
 
 class KVCache(CacheSlots):
     """Attention-cache protocol on top of :class:`CacheSlots`.

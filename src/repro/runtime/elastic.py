@@ -17,12 +17,19 @@ the tests drive it with simulated host populations:
 * **HealthMonitor**: heartbeat bookkeeping with configurable timeout;
   in production the heartbeats come from the coordinator service, in
   tests from the simulator.
+* **ElasticSupervisor**: the wiring into the SERVING stack — heartbeat
+  state drives ``PipelinedScheduler.set_capacity``/``drain``.  A host
+  loss shrinks serving capacity proportionally (excess streams park
+  mid-generation and resume when hosts return) instead of dropping
+  live streams; losing every host drains the scheduler.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+
+from repro.runtime.faults import InjectedFault, fault_point
 
 
 @dataclass(frozen=True)
@@ -113,3 +120,90 @@ class HealthMonitor:
     def dead(self, hosts: list[int], now: float | None = None) -> list[int]:
         a = set(self.alive(hosts, now))
         return [h for h in hosts if h not in a]
+
+
+class ElasticSupervisor:
+    """Wires heartbeat health into the serving scheduler's capacity.
+
+    ``beat(host)`` feeds the :class:`HealthMonitor` (through the
+    ``"heartbeat"`` fault-injection site, so chaos tests can drop beats
+    deterministically: an injected fault at the site IS a lost beat,
+    not an error).  ``poll()`` recomputes the alive set; when it
+    changes, capacity scales with the surviving fraction —
+    ``ceil(slots * alive / hosts)`` concurrent slots via
+    ``scheduler.set_capacity`` (excess streams park, preserved
+    mid-generation) — and losing EVERY host drains the scheduler
+    (capacity 0 + ``drain``; recovery undrains).  When ``model_parallel``
+    is set, a survivor set too small to host the model axis
+    (``plan_remesh`` raising) also maps to a full drain: without a
+    runnable mesh there is no engine to serve on.
+
+    Single-process serving has exactly one real host; the simulated
+    host population exists so capacity policy (the subtle part) is
+    exercised by tests the way a real coordinator would drive it.
+    """
+
+    def __init__(self, scheduler, *, hosts: int, monitor: HealthMonitor
+                 | None = None, model_parallel: int | None = None,
+                 devices_per_host: int = 4, clock=time.monotonic):
+        if hosts < 1:
+            raise ValueError(f"need at least one host, got {hosts}")
+        self.scheduler = scheduler
+        self.hosts = list(range(hosts))
+        self.monitor = monitor if monitor is not None else HealthMonitor()
+        self.model_parallel = model_parallel
+        self.devices_per_host = devices_per_host
+        self._clock = clock
+        self._alive: tuple[int, ...] = tuple(self.hosts)
+        self.events: list[dict] = []
+        # every host starts alive at construction time
+        now = self._clock()
+        for h in self.hosts:
+            self.monitor.beat(h, now)
+
+    def beat(self, host: int, now: float | None = None) -> bool:
+        """One heartbeat from ``host``; returns False when the beat was
+        LOST (injected at the "heartbeat" site) — the monitor then ages
+        the host toward its timeout exactly as a real silent host
+        would."""
+        try:
+            fault_point("heartbeat", host=host)
+        except InjectedFault:
+            return False
+        self.monitor.beat(host, self._clock() if now is None else now)
+        return True
+
+    def poll(self, now: float | None = None) -> dict | None:
+        """Recompute the alive set; on change, re-plan capacity and
+        apply it to the scheduler.  Returns the event record (also
+        appended to ``events``) or None when nothing changed."""
+        now = self._clock() if now is None else now
+        alive = tuple(self.monitor.alive(self.hosts, now))
+        if alive == self._alive:
+            return None
+        prev, self._alive = self._alive, alive
+        sched = self.scheduler
+        slots = sched.engine.slots
+        if not alive:
+            capacity = 0
+        elif self.model_parallel is not None:
+            try:
+                plan_remesh(len(self.hosts), list(alive),
+                            model_parallel=self.model_parallel,
+                            global_batch=max(slots, 1),
+                            devices_per_host=self.devices_per_host)
+                capacity = -(-slots * len(alive) // len(self.hosts))
+            except RuntimeError:
+                capacity = 0      # survivors can't host the model axis
+        else:
+            capacity = -(-slots * len(alive) // len(self.hosts))
+        if capacity == 0:
+            sched.set_capacity(0)
+            sched.drain()
+        else:
+            sched.undrain()
+            sched.set_capacity(capacity)
+        event = {"prev": prev, "alive": alive, "capacity": capacity,
+                 "drained": capacity == 0}
+        self.events.append(event)
+        return event

@@ -127,8 +127,19 @@ class ServingMetrics:
         self.finished_total = 0
         self.cancelled_total = 0
         self.tokens_total = 0
+        # fault-tolerance counters (scheduler recovery paths feed these)
+        self.fault_counts: dict[str, int] = {}   # site -> injected/observed
+        self.retries_total = 0
+        self.quarantined_total = 0
+        self.parked_total = 0
+        self.resumed_total = 0
+        self.degrade_level = 0
+        self.watchdog_trips = 0
         self._t0 = None       # first submit (throughput denominator)
         self._t_last = None   # most recent token/finish
+        # wall-clock is USER-FACING ONLY (snapshot timestamps); every
+        # latency/deadline measurement above runs on the monotonic clock
+        self.started_wall = time.time()
 
     # .. lifecycle ..
     def submitted(self, uid: int, now: float | None = None) -> None:
@@ -183,6 +194,43 @@ class ServingMetrics:
             self._live.pop(uid, None)
             self.cancelled_total += 1
 
+    # .. fault tolerance ..
+    def fault(self, site: str) -> None:
+        """One fault surfaced at ``site`` (injected or organic)."""
+        with self._lock:
+            self.fault_counts[site] = self.fault_counts.get(site, 0) + 1
+
+    def retried(self, uid: int | None = None) -> None:
+        """One tick/request retry after a rollback."""
+        del uid
+        with self._lock:
+            self.retries_total += 1
+
+    def quarantined(self, uid: int) -> None:
+        """Request failed past its retry budget; reported, not served."""
+        with self._lock:
+            self._live.pop(uid, None)
+            self.quarantined_total += 1
+
+    def watchdog_trip(self) -> None:
+        with self._lock:
+            self.watchdog_trips += 1
+
+    def parked(self, uid: int) -> None:
+        """Stream suspended mid-generation (elastic capacity shrink)."""
+        del uid
+        with self._lock:
+            self.parked_total += 1
+
+    def resumed(self, uid: int) -> None:
+        del uid
+        with self._lock:
+            self.resumed_total += 1
+
+    def set_degrade_level(self, level: int) -> None:
+        with self._lock:
+            self.degrade_level = level
+
     def set_queue_depth(self, depth: int, active: int | None = None) -> None:
         with self._lock:
             self.queue_depth = depth
@@ -225,6 +273,17 @@ class ServingMetrics:
                           "active_slots": self.active_slots},
                 "tokens": {"emitted": self.tokens_total,
                            "per_s": None if tps is None else round(tps, 1)},
+                "faults": {
+                    "by_site": dict(self.fault_counts),
+                    "total": sum(self.fault_counts.values()),
+                    "retries": self.retries_total,
+                    "quarantined": self.quarantined_total,
+                    "watchdog_trips": self.watchdog_trips,
+                    "degrade_level": self.degrade_level,
+                    "parked": self.parked_total,
+                    "resumed": self.resumed_total,
+                },
+                "started_wall": self.started_wall,
             }
         out["ttft"] = self.ttft.snapshot()
         out["inter_token"] = self.itl.snapshot()

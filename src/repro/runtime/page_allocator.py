@@ -31,6 +31,8 @@ from __future__ import annotations
 
 from collections.abc import Mapping
 
+from repro.runtime.faults import fault_point
+
 
 class PageAllocator:
     """Refcounted allocator over page ids ``1..total`` (0 = null page)."""
@@ -53,6 +55,7 @@ class PageAllocator:
         """Pop ``n`` fresh pages, each with refcount 1."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} pages")
+        fault_point("allocator.alloc", n=n, free=len(self._free))
         if n > len(self._free):
             raise RuntimeError(
                 f"page pool exhausted: need {n}, have {len(self._free)} "
@@ -93,6 +96,19 @@ class PageAllocator:
             "shared": sum(1 for c in self._refs.values() if c > 1),
             "resident": len(self._refs),
         }
+
+    def snapshot(self) -> tuple:
+        """Full allocator state (free list + refcounts), copied — the
+        engine snapshot/rollback boundary captures it so a failed tick's
+        partial allocations unwind exactly."""
+        return (list(self._free), dict(self._refs))
+
+    def restore(self, snap: tuple) -> None:
+        """Adopt a ``snapshot()``; copies, so one snapshot restores any
+        number of times."""
+        free, refs = snap
+        self._free = list(free)
+        self._refs = dict(refs)
 
     def check(self, occupancy: Mapping[int, int]) -> None:
         """Leak check: assert refcounts == the holders the caller can see.

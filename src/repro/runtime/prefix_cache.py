@@ -168,6 +168,38 @@ class PrefixCache:
         """Every page id the cache currently pins (for leak checks)."""
         return list(self._by_page)
 
+    # .. snapshot / restore (the engine rollback boundary) ..
+    def snapshot(self) -> tuple:
+        """Deep-copy the trie + counters.  Paired with the allocator's
+        snapshot: a failed tick may have inserted/evicted cache entries
+        whose pins must unwind with the refcounts they mirror."""
+        def cp(node, parent):
+            n2 = _Node(node.block, node.page, parent, node.last_used)
+            for key, child in node.children.items():
+                n2.children[key] = cp(child, n2)
+            return n2
+        return (cp(self._root, None), self._clock, dict(self.counters))
+
+    def restore(self, snap: tuple) -> None:
+        """Adopt a ``snapshot()`` (itself re-copied, so one snapshot
+        restores any number of times)."""
+        root, clock, counters = snap
+        def cp(node, parent):
+            n2 = _Node(node.block, node.page, parent, node.last_used)
+            for key, child in node.children.items():
+                n2.children[key] = cp(child, n2)
+            return n2
+        self._root = cp(root, None)
+        self._clock = clock
+        self.counters = dict(counters)
+        self._by_page = {}
+        stack = [self._root]
+        while stack:
+            node = stack.pop()
+            if node.parent is not None:
+                self._by_page[node.page] = node
+            stack.extend(node.children.values())
+
     def stats(self) -> dict[str, float]:
         """Lookup/insert/evict counters + hit rate + residency snapshot."""
         out = dict(self.counters)

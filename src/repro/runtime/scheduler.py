@@ -65,6 +65,42 @@ HTTP thread may ``submit``/``cancel`` while the engine thread runs
 pages and prefix-cache pins through ``ServeEngine._release_slot`` and
 the allocator leak check stays clean (asserted in tests, cancelling at
 every tick).
+
+FAULT TOLERANCE (``max_retries`` / ``watchdog_timeout`` / ``degrade``
+— any of them turns it on): every tick then runs inside a
+snapshot/rollback envelope.  The scheduler captures the engine (device
+pools cloned — the decode jits donate their cache, so an aliasing
+snapshot would die with the next dispatch) plus its own queue/status
+state at the tick boundary, runs the tick, and on ANY raised fault —
+injected (``repro.runtime.faults``), organic, or a watchdog-detected
+stall — restores both and retries.  Fault-tolerant mode forces
+``pipeline_depth = 0``: a snapshot with dispatched-but-unprocessed
+ticks in flight would capture device positions ahead of the host
+mirror, so boundaries must be fully processed.  Retries REPLAY
+deterministically — per-request sampler keys fold from ``(seed, uid)``,
+so the retried stream is bit-identical to a never-failed run — and
+tokens the client already saw before the rollback are suppressed by a
+forwarded-count guard (``_fwd`` never rolls back; ``_progress`` does),
+so streams observe each token exactly once.  A request that keeps
+failing past ``max_retries`` is QUARANTINED: removed wherever it
+lives, reported through ``errors[uid]`` as a structured record, and
+its stream closed with a ``(None, True)`` failure sentinel.  Faults
+that carry no uid (a poisoned batched decode) blame the oldest active
+request once the anonymous failure streak passes the same budget.
+A :class:`DegradePolicy` adds graceful degradation on top: each
+recovered fault escalates one level (1: disable speculative bursts —
+``spec_mode="match"`` makes that bit-identical; 2: halve the prefill
+chunk window; 3: shed the lowest-priority queued request), and clean
+ticks walk the level back down.
+
+ELASTIC CAPACITY (``set_capacity`` / ``drain``): a health event can
+shrink the scheduler to ``n`` concurrent slots — excess streams PARK
+mid-generation (``ServeEngine.park_slot``: pages stay resident, the
+slot frees) and resume bit-identically when capacity returns, oldest
+first, ahead of fresh admissions.  ``drain`` stops admission entirely
+(new submits shed with reason "draining") while in-flight streams
+finish; ``undrain`` reopens.  ``runtime.elastic.ElasticSupervisor``
+drives both from heartbeat state.
 """
 
 from __future__ import annotations
@@ -79,11 +115,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.faults import fault_point
 from repro.runtime.metrics import ServingMetrics
 from repro.runtime.serve_loop import Request, ServeEngine, _SlotState
 
 QUEUED, PREFILL, ACTIVE = "queued", "prefill", "active"
 DONE, SHED, CANCELLED = "done", "shed", "cancelled"
+PARKED, FAILED = "parked", "failed"
+
+
+class WatchdogTimeout(RuntimeError):
+    """A tick exceeded the watchdog budget (stuck/poisoned dispatch)."""
+
+
+@dataclass
+class DegradePolicy:
+    """Graceful-degradation ladder for the fault-tolerant scheduler.
+
+    Each recovered fault escalates one level; ``recover_after``
+    consecutive clean ticks walk one level back down:
+
+    * level 1 — disable speculative bursts (``engine.spec_enabled``):
+      with ``spec_mode="match"`` the emitted streams are bit-identical
+      either way, so this is a pure blast-radius reduction;
+    * level 2 — halve the prefill chunk window (floored at
+      ``min_chunk``): smaller dispatches, smaller rollbacks;
+    * level 3 — shed the lowest-priority queued request on each further
+      escalation (load drops before latency does).
+    """
+
+    min_chunk: int = 8
+    recover_after: int = 16
+
+    def __post_init__(self):
+        if self.min_chunk < 1:
+            raise ValueError(f"min_chunk must be >= 1, got {self.min_chunk}")
+        if self.recover_after < 1:
+            raise ValueError(
+                f"recover_after must be >= 1, got {self.recover_after}")
 
 
 @dataclass(order=True)
@@ -125,21 +194,41 @@ class PipelinedScheduler:
     prefill_chunk: chunk-grid width for split-stream admission
         (default: the engine's ``prefill_chunk``, else 32).
     metrics: a ``ServingMetrics`` to record into (default: fresh one).
+    max_retries: per-request retry budget after a recovered fault; past
+        it the request is quarantined (status FAILED, ``errors[uid]``).
+    watchdog_timeout: seconds one tick may take before it is treated as
+        stuck — rolled back and retried like any other fault.
+    degrade: a :class:`DegradePolicy` for graceful degradation.
+    Setting any of the three enables fault-tolerant ticking (snapshot/
+    rollback envelope; forces ``pipeline_depth = 0`` — every tick then
+    pays one engine snapshot, the price of an exact rollback boundary).
     """
 
     def __init__(self, engine: ServeEngine, *, pipeline_depth: int = 1,
                  max_queue: int = 256, prefill_chunk: int | None = None,
                  metrics: ServingMetrics | None = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, max_retries: int = 0,
+                 watchdog_timeout: float | None = None,
+                 degrade: DegradePolicy | None = None):
         if pipeline_depth < 0:
             raise ValueError(f"pipeline_depth must be >= 0, got "
                              f"{pipeline_depth}")
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if watchdog_timeout is not None and watchdog_timeout <= 0:
+            raise ValueError(
+                f"watchdog_timeout must be > 0, got {watchdog_timeout}")
         if engine._active or engine._queue:
             raise ValueError("scheduler must take over an idle engine")
         self.engine = engine
-        self.depth = 0 if engine._spec else pipeline_depth
+        self.max_retries = max_retries
+        self.watchdog_timeout = watchdog_timeout
+        self.degrade = degrade
+        self._ft = (max_retries > 0 or watchdog_timeout is not None
+                    or degrade is not None)
+        self.depth = (0 if engine._spec or self._ft else pipeline_depth)
         self.max_queue = max_queue
         self.chunk = max(1, prefill_chunk or engine.prefill_chunk or 32)
         self.metrics = metrics if metrics is not None else ServingMetrics()
@@ -164,6 +253,23 @@ class PipelinedScheduler:
         self._park_pos = np.zeros((engine.slots,), np.int32)
         self._chain_on_token = engine.on_token
         engine.on_token = self._on_token
+
+        # .. fault-tolerance / elastic state ..
+        self.errors: dict[int, dict] = {}      # uid -> structured failure
+        self._retry_counts: dict[int, int] = {}
+        self._fail_streak = 0                  # consecutive anonymous faults
+        self._clean_ticks = 0
+        self._degrade_level = 0
+        self._base_chunk = self.chunk
+        # emission dedup across rollbacks: ``_progress`` counts tokens
+        # the ENGINE has emitted per uid (rolls back with the snapshot);
+        # ``_fwd`` counts tokens the CLIENT has seen (never rolls back).
+        # A retried tick re-emits history deterministically; _on_token
+        # forwards a token only when progress passes the forwarded mark.
+        self._progress: dict[int, int] = {}
+        self._fwd: dict[int, int] = {}
+        self._capacity = engine.slots
+        self._draining = False
 
         model, sampler = engine.model, engine._sampler
 
@@ -239,6 +345,9 @@ class PipelinedScheduler:
         started.  ``on_token(tok, done)`` streams tokens as they are
         emitted (called under the scheduler lock — keep it quick)."""
         with self._lock:
+            if self._draining:
+                self.metrics.shed("draining")
+                return None
             if self._queued >= self.max_queue:
                 self.metrics.shed("queue_full")
                 return None
@@ -266,7 +375,7 @@ class PipelinedScheduler:
         Returns False for unknown or already-terminal uids."""
         with self._lock:
             st = self._status.get(uid)
-            if st not in (QUEUED, PREFILL, ACTIVE):
+            if st not in (QUEUED, PREFILL, ACTIVE, PARKED):
                 return False
             if st == QUEUED:
                 self._queued -= 1        # heap entry dies lazily at pop
@@ -276,6 +385,8 @@ class PipelinedScheduler:
                 self._prefill = None
                 self._park_mask[pf.slot] = False
                 self.engine._release_slot(pf.slot)
+            elif st == PARKED:
+                self.engine.drop_parked(uid)
             else:
                 self.engine.cancel(uid)
             self._status[uid] = CANCELLED
@@ -296,10 +407,33 @@ class PipelinedScheduler:
     def busy(self) -> bool:
         with self._lock:
             return bool(self._queued or self.engine._active
-                        or self._prefill or self._pipeline)
+                        or self._prefill or self._pipeline
+                        or self.engine._parked)
+
+    @property
+    def state(self) -> str:
+        """Serving state for readiness probes: "draining" | "degraded" |
+        "ready" (the server layers "starting" on top before its loop
+        spins up)."""
+        with self._lock:
+            if self._draining:
+                return "draining"
+            if self._degrade_level > 0:
+                return "degraded"
+            return "ready"
 
     # .. emission ..
     def _on_token(self, uid: int, tok: int, done: bool) -> None:
+        cur = self._progress.get(uid, 0) + 1
+        self._progress[uid] = cur
+        if cur <= self._fwd.get(uid, 0):
+            # deterministic replay of an already-delivered token (a
+            # retried tick re-emitting history): the client saw this
+            # exact token — record engine progress, forward nothing
+            if done:
+                self._status[uid] = DONE
+            return
+        self._fwd[uid] = cur
         self.metrics.token(uid)
         if done:
             self.metrics.finished(uid)
@@ -320,12 +454,14 @@ class PipelinedScheduler:
 
     def _dispatch_decode(self) -> _Entry:
         eng = self.engine
+        fault_point("decode.dispatch")
         # a dispatch-ahead tick writes up to len(pipeline) positions
         # past the host mirror: make that whole span write-safe first
         eng._map_tick_pages(len(self._pipeline))
         toks = self._feed()
         pmask = jnp.asarray(self._park_mask)
         ppos = jnp.asarray(self._park_pos)
+        fault_point("sampler")
         if eng._temp.any() or eng._truncates:
             tok, eng._keys, eng.cache = self._sampled_tick(
                 eng.params, eng.cache, toks, pmask, ppos,
@@ -378,9 +514,26 @@ class PipelinedScheduler:
         self._queued += 1
         self._status[self._qe_backout.req.uid] = QUEUED
 
+    def _occupied(self) -> int:
+        return len(self.engine._active) + (1 if self._prefill else 0)
+
     def _admit_loop(self, now: float) -> None:
         eng = self.engine
-        while eng._free and self._prefill is None:
+        # parked streams resume FIRST, oldest first — they were already
+        # admitted once and their pages are still resident, so resuming
+        # costs zero prefill and frees held capacity soonest
+        while (eng._parked and eng._free
+               and self._occupied() < self._capacity):
+            uid = min(eng._parked)
+            slot = eng.resume_parked(uid)
+            self._status[uid] = ACTIVE
+            self.metrics.resumed(uid)
+            self._tok_dev = self._feed().at[slot].set(
+                jnp.int32(int(eng._next_tok[slot])))
+        if self._draining:
+            return
+        while (eng._free and self._prefill is None
+               and self._occupied() < self._capacity):
             req = self._pop_ready(now)
             if req is None:
                 return
@@ -411,6 +564,7 @@ class PipelinedScheduler:
         cached prompt — one peek dispatch) or park the slot and hand the
         suffix to the chunk stream."""
         eng = self.engine
+        fault_point("prefill.dispatch", uid=req.uid)
         pos0 = eng._map_prefix(slot, req)
         if pos0 is None:
             return False
@@ -439,6 +593,7 @@ class PipelinedScheduler:
         pf = self._prefill
         assert pf is not None
         eng, req, slot, lo = self.engine, pf.req, pf.slot, pf.lo
+        fault_point("prefill.dispatch", uid=req.uid)
         cap = eng._pps * eng.page_size
         hi = min((lo // self.chunk + 1) * self.chunk, cap)
         real_hi = min(hi, pf.n)
@@ -474,6 +629,7 @@ class PipelinedScheduler:
         eng._temp[slot] = req.temperature
         eng._keys = eng._keys.at[slot].set(
             jax.random.fold_in(eng._seed_key, req.uid))
+        fault_point("sampler", uid=req.uid)
         tok, krow = eng._sampler(
             logits, eng._keys[slot:slot + 1],
             jnp.full((1,), req.temperature, jnp.float32))
@@ -491,32 +647,228 @@ class PipelinedScheduler:
         """One scheduler tick: dispatch the next decode tick (if any
         slot is decoding), advance the prefill stream by one chunk /
         admission, then process pipeline entries beyond the allowed
-        in-flight depth.  Returns True while there is (or will be)
-        work."""
+        in-flight depth.  In fault-tolerant mode the whole tick runs
+        inside a snapshot/rollback envelope (see the class docstring).
+        Returns True while there is (or will be) work."""
         with self._lock:
-            now = self._clock()
-            eng = self.engine
-            if eng._spec:
-                # speculative fallback: the draft/verify burst is its
-                # own host-synced stream — admission control + metrics
-                # apply, pipelining doesn't
-                self._admit_loop(now)
-                if eng._active:
-                    eng.step()
-                self._gauges()
-                return self.busy
-            dispatched = False
-            if eng._active:
-                self._pipeline.append(self._dispatch_decode())
-                dispatched = True
-            if self._prefill is not None:
-                self._advance_chunk()
+            if not self._ft:
+                return self._tick_inner()
+            return self._tick_ft()
+
+    def _tick_inner(self) -> bool:
+        now = self._clock()
+        eng = self.engine
+        if eng._spec:
+            # speculative fallback: the draft/verify burst is its
+            # own host-synced stream — admission control + metrics
+            # apply, pipelining doesn't.  (A degraded spec engine —
+            # spec_enabled off — still ticks here: engine.step()
+            # falls back to plain decode internally.)
             self._admit_loop(now)
-            limit = self.depth if dispatched else 0
-            while len(self._pipeline) > limit:
-                self._process_entry(self._pipeline.popleft())
+            if eng._active:
+                eng.step()
             self._gauges()
             return self.busy
+        dispatched = False
+        if eng._active:
+            self._pipeline.append(self._dispatch_decode())
+            dispatched = True
+        if self._prefill is not None:
+            self._advance_chunk()
+        self._admit_loop(now)
+        limit = self.depth if dispatched else 0
+        while len(self._pipeline) > limit:
+            self._process_entry(self._pipeline.popleft())
+        self._gauges()
+        return self.busy
+
+    # .. fault-tolerant envelope ..
+    def _snap_all(self) -> tuple:
+        pf = self._prefill
+        return (self.engine.snapshot(), list(self._heap), self._queued,
+                self._seq, dict(self._status), dict(self._progress),
+                None if pf is None else _Prefill(pf.slot, pf.req, pf.lo,
+                                                 pf.n),
+                self._park_mask.copy(), self._park_pos.copy())
+
+    def _restore_all(self, snap: tuple) -> None:
+        (esnap, heap, queued, seq, status, progress, pf,
+         park_mask, park_pos) = snap
+        self.engine.restore(esnap)
+        self._heap = list(heap)       # entries are never mutated in place
+        self._queued = queued
+        self._seq = seq
+        self._status = dict(status)
+        self._progress = dict(progress)
+        self._prefill = (None if pf is None
+                         else _Prefill(pf.slot, pf.req, pf.lo, pf.n))
+        self._park_mask = park_mask.copy()
+        self._park_pos = park_pos.copy()
+        self._pipeline.clear()        # depth 0: nothing in flight anyway
+        self._tok_dev = None          # feed rebuilds from the host mirror
+
+    def _tick_ft(self) -> bool:
+        snap = self._snap_all()
+        t0 = self._clock()
+        try:
+            out = self._tick_inner()
+            if (self.watchdog_timeout is not None
+                    and self._clock() - t0 > self.watchdog_timeout):
+                self.metrics.watchdog_trip()
+                raise WatchdogTimeout(
+                    f"tick exceeded the {self.watchdog_timeout}s watchdog "
+                    "budget: treating the dispatch as stuck")
+        except Exception as exc:                    # noqa: BLE001
+            self._recover(snap, exc)
+            return self.busy
+        self._fail_streak = 0
+        if self.degrade is not None and self._degrade_level:
+            self._clean_ticks += 1
+            if self._clean_ticks >= self.degrade.recover_after:
+                self._degrade_level -= 1
+                self._clean_ticks = 0
+                self._apply_degrade()
+        return out
+
+    def _recover(self, snap: tuple, exc: Exception) -> None:
+        """Roll back to the tick-boundary snapshot, attribute blame, and
+        either retry (deterministic replay next tick) or quarantine."""
+        site = getattr(exc, "site", None) or (
+            "watchdog" if isinstance(exc, WatchdogTimeout) else "internal")
+        self.metrics.fault(site)
+        self._restore_all(snap)
+        self.engine.check_leaks()     # rollback must leave zero drift
+        uid = getattr(exc, "uid", None)
+        if uid is not None:
+            self._retry_counts[uid] = self._retry_counts.get(uid, 0) + 1
+            if self._retry_counts[uid] > self.max_retries:
+                self._quarantine(uid, exc, site)
+            else:
+                self.metrics.retried(uid)
+        else:
+            self._fail_streak += 1
+            if self._fail_streak > self.max_retries:
+                # an anonymous fault that keeps recurring: quarantine
+                # the oldest in-flight request as the deterministic
+                # scapegoat (poisoned batches are usually led by their
+                # longest-lived member)
+                victim = self._blame_victim()
+                if victim is not None:
+                    self._quarantine(victim, exc, site)
+                self._fail_streak = 0
+            else:
+                self.metrics.retried()
+        if self.degrade is not None:
+            self._degrade_level = min(3, self._degrade_level + 1)
+            self._clean_ticks = 0
+            self._apply_degrade()
+            if self._degrade_level >= 3:
+                self._shed_worst()
+
+    def _blame_victim(self) -> int | None:
+        eng = self.engine
+        if eng._active:
+            return min(st.req.uid for st in eng._active.values())
+        if self._prefill is not None:
+            return self._prefill.req.uid
+        live = [qe for qe in self._heap
+                if self._status.get(qe.req.uid) == QUEUED]
+        if live:
+            return min(live).req.uid
+        return None
+
+    def _quarantine(self, uid: int, exc: Exception, site: str) -> None:
+        """Fail ``uid`` permanently: release whatever it holds, record a
+        structured error, and close its stream with a (None, True)
+        failure sentinel so clients distinguish 'failed' from 'done'."""
+        eng = self.engine
+        st = self._status.get(uid)
+        if st == QUEUED:
+            self._queued -= 1              # heap entry dies lazily at pop
+        elif st == PREFILL and self._prefill is not None \
+                and self._prefill.req.uid == uid:
+            slot = self._prefill.slot
+            self._prefill = None
+            self._park_mask[slot] = False
+            eng._release_slot(slot)
+        elif st == PARKED:
+            eng.drop_parked(uid)
+        else:
+            eng.cancel(uid)
+        self._status[uid] = FAILED
+        self.errors[uid] = {
+            "uid": uid,
+            "site": site,
+            "error": type(exc).__name__,
+            "message": str(exc),
+            "retries": self._retry_counts.get(uid, 0),
+        }
+        self.metrics.quarantined(uid)
+        cb = self._streams.pop(uid, None)
+        if cb is not None:
+            cb(None, True)
+
+    def _apply_degrade(self) -> None:
+        lvl = self._degrade_level
+        eng = self.engine
+        if eng._spec:
+            eng.spec_enabled = lvl < 1
+        self.chunk = (self._base_chunk if lvl < 2 else
+                      max(self.degrade.min_chunk, self._base_chunk // 2))
+        self.metrics.set_degrade_level(lvl)
+
+    def _shed_worst(self) -> None:
+        live = [qe for qe in self._heap
+                if self._status.get(qe.req.uid) == QUEUED]
+        if not live:
+            return
+        victim = max(live, key=lambda qe: (qe.priority, qe.seq))
+        self._queued -= 1                  # heap entry dies lazily at pop
+        self._status[victim.req.uid] = SHED
+        self._streams.pop(victim.req.uid, None)
+        self.metrics.shed("degraded")
+
+    # .. elastic capacity ..
+    def set_capacity(self, n: int) -> None:
+        """Shrink/grow to at most ``n`` concurrently-served slots.
+        Shrinking below current occupancy PARKS the youngest active
+        streams (pages stay resident; ``resume_parked`` continues them
+        bit-identically when capacity returns).  Engines that cannot
+        park (row backends, speculative) shrink by attrition: no new
+        admissions until occupancy fits."""
+        with self._lock:
+            self._capacity = max(0, min(n, self.engine.slots))
+            self._enforce_capacity()
+
+    @property
+    def capacity(self) -> int:
+        with self._lock:
+            return self._capacity
+
+    def _enforce_capacity(self) -> None:
+        eng = self.engine
+        if eng.cache_kind != "paged" or eng._spec:
+            return                         # attrition-only shrink
+        # process in-flight ticks first so parking sees settled state
+        while self._pipeline:
+            self._process_entry(self._pipeline.popleft())
+        self._tok_dev = None
+        while self._occupied() > self._capacity and eng._active:
+            slot = max(eng._active, key=lambda s: eng._active[s].req.uid)
+            uid = eng.park_slot(slot)
+            self._status[uid] = PARKED
+            self.metrics.parked(uid)
+
+    def drain(self) -> None:
+        """Stop admitting: queued requests wait, new submits shed with
+        reason "draining" (the HTTP layer answers 429), in-flight
+        streams run to completion.  ``undrain`` reopens admission."""
+        with self._lock:
+            self._draining = True
+
+    def undrain(self) -> None:
+        with self._lock:
+            self._draining = False
 
     def _gauges(self) -> None:
         self.metrics.set_queue_depth(self._queued,
@@ -546,11 +898,14 @@ class PipelinedScheduler:
         plus engine page/prefix-cache/spec counters when present."""
         with self._lock:
             eng = self.engine
-            extra = {}
+            extra = {"state": self.state,
+                     "capacity": self._capacity,
+                     "parked": len(eng._parked),
+                     "failed": len(self.errors)}
             if eng.page_stats is not None:
                 extra["pages"] = eng.page_stats
             if eng.prefix_stats is not None:
                 extra["prefix_cache"] = eng.prefix_stats
             return self.metrics.snapshot(
                 spec_stats=dict(eng.spec_stats) if eng._spec else None,
-                extra=extra or None)
+                extra=extra)

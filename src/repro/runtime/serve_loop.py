@@ -49,7 +49,7 @@ issues 2 plane matmuls per layer instead of 4.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,7 @@ import numpy as np
 from repro.models import kv_cache
 from repro.models.transformer import Model
 from repro.runtime import sampling
+from repro.runtime.faults import InjectedFault, fault_point
 from repro.runtime.page_allocator import PageAllocator
 from repro.runtime.prefix_cache import PrefixCache
 
@@ -218,6 +219,62 @@ class Request:
 class _SlotState:
     req: Request
     emitted: list[int] = field(default_factory=list)
+
+
+@dataclass
+class _Parked:
+    """A stream suspended mid-generation: everything needed to resume it
+    bit-identically in any free slot later.  The page references move
+    from the slot to this record — the pool keeps the KV resident, no
+    other slot can allocate those pages, and ``check_leaks`` counts the
+    record as a holder."""
+
+    req: Request
+    emitted: list[int]
+    pos: int
+    start: int
+    temp: float
+    key: object                  # [2] uint32 PRNG row (device, immutable)
+    next_tok: int
+    table_row: np.ndarray
+    pages: list[int]
+    shared: list[int]
+    reserved: int
+
+
+@dataclass
+class EngineSnapshot:
+    """One consistent tick boundary of a :class:`ServeEngine`.
+
+    Device pools are CLONED (``kv_cache.CacheSlots.clone``) because the
+    serving jits donate the live cache — an aliasing snapshot would be
+    invalidated by the first post-snapshot dispatch.  Host mirrors,
+    allocator refcounts and prefix-cache pins are copied so a rollback
+    unwinds partial tick mutations exactly.  ``restore`` re-copies, so
+    one snapshot restores any number of times.
+    """
+
+    cache: dict
+    dcache: dict | None
+    keys: object
+    pos: np.ndarray
+    start: np.ndarray
+    temp: np.ndarray
+    next_tok: np.ndarray
+    free: list
+    queue: list
+    active: dict                 # slot -> (req, emitted copy)
+    results: dict
+    parked: dict                 # uid -> _Parked (emitted copied)
+    next_uid: int
+    spec_stats: dict
+    cow_copies: int
+    table: np.ndarray | None = None
+    slot_pages: dict | None = None
+    slot_shared: dict | None = None
+    slot_reserved: dict | None = None
+    alloc: tuple | None = None
+    prefix: tuple | None = None
 
 
 class ServeEngine:
@@ -481,9 +538,11 @@ class ServeEngine:
         self._seed_key = jax.random.PRNGKey(seed)
         self._keys = sampling.init_keys(self._seed_key, slots)
         self._temp = np.zeros((slots,), np.float32)
-        # host mirror of cache["pos"] so per-slot bookkeeping never syncs
-        # on the device cache mid-tick
+        # host mirrors of cache["pos"]/cache["start"] so per-slot
+        # bookkeeping never syncs on the device cache mid-tick
         self._pos = np.zeros((slots,), np.int64)
+        self._start = np.zeros((slots,), np.int64)
+        self._parked: dict[int, _Parked] = {}
         self._queue: deque[Request] = deque()
         self._free = list(range(slots))
         self._active: dict[int, _SlotState] = {}
@@ -498,6 +557,14 @@ class ServeEngine:
 
         # .. speculative decoding ..
         self._spec = draft_model is not None
+        # graceful-degradation knob: a scheduler's DegradePolicy can flip
+        # this off to fall back to plain decode ticks.  spec_mode="match"
+        # couples acceptance to the plain sampler's key chain, so the
+        # emitted streams are bit-identical either way — disabling is a
+        # pure perf change.  (Re-enabling leaves the drafter's KV holes
+        # for the plainly-decoded stretch: acceptance dips, output
+        # doesn't.)
+        self.spec_enabled = True
         self.spec_stats = {"ticks": 0, "drafted": 0, "accepted": 0,
                            "emitted": 0}
         if not self._spec:
@@ -615,6 +682,7 @@ class ServeEngine:
         self.cache["pos"] = self.cache["pos"].at[slot].set(0)
         self.cache["start"] = self.cache["start"].at[slot].set(0)
         self._pos[slot] = 0
+        self._start[slot] = 0
         self._temp[slot] = 0.0
         self._next_tok[slot] = self.pad_id
         if self._spec:
@@ -723,6 +791,8 @@ class ServeEngine:
             self._prefix.evict(short)
         try:
             return self._alloc.alloc(n)
+        except InjectedFault:
+            raise                 # keep site/uid attribution for recovery
         except RuntimeError as e:
             raise RuntimeError(
                 "page reservation accounting is broken: pool exhausted "
@@ -816,6 +886,7 @@ class ServeEngine:
         """Admit ``req`` into ``slot``; False when the paged pool can't
         cover its worst case yet (the caller stops admitting until an
         EOS returns pages)."""
+        fault_point("prefill.dispatch", uid=req.uid)
         n = len(req.tokens)
         if self._prefix is not None:
             pos0 = self._map_prefix(slot, req)
@@ -893,12 +964,14 @@ class ServeEngine:
             self._dcache["start"] = (
                 self._dcache["start"].at[slot].set(start))
         self._pos[slot] = pos
+        self._start[slot] = start
         self._active[slot] = _SlotState(req)
         self._temp[slot] = req.temperature
         # per-request key: replaying a request samples the same stream
         # regardless of which slot (or neighbours) it lands with
         self._keys = self._keys.at[slot].set(
             jax.random.fold_in(self._seed_key, req.uid))
+        fault_point("sampler", uid=req.uid)
         tok, krow = self._sampler(
             logits, self._keys[slot:slot + 1],
             jnp.full((1,), req.temperature, jnp.float32))
@@ -959,12 +1032,19 @@ class ServeEngine:
         self._admit()
         if not self._active:
             return bool(self._queue)
-        if self._spec:
+        if self._spec and self.spec_enabled:
             return self._spec_tick()
+        fault_point("decode.dispatch")
         self._map_tick_pages()
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self._next_tok))
         self._pos += 1     # decode_step advances every slot's pos
+        if self._spec:
+            # spec temporarily degraded to plain decode: keep the
+            # drafter's pos in step so re-enabling resumes cleanly (its
+            # missing KV rows only cost acceptance, never correctness)
+            self._dcache["pos"] = jnp.asarray(self._pos.astype(np.int32))
+        fault_point("sampler")
         if self._temp.any() or self._truncates:
             toks, self._keys = self._sampler(
                 logits, self._keys, jnp.asarray(self._temp))
@@ -981,6 +1061,7 @@ class ServeEngine:
         (one burst dispatch), then commit each slot's accepted prefix
         and roll the rest back — pos-vector reset for attention rows,
         per-step state select for SSM layers."""
+        fault_point("spec.verify")
         active = list(self._active)
         # headroom cap: the burst writes rows pos .. pos+tick_k, which
         # must stay inside max_len for every slot (slots free at
@@ -1044,6 +1125,168 @@ class ServeEngine:
         d = self.spec_stats["drafted"]
         return None if d == 0 else self.spec_stats["accepted"] / d
 
+    # .. snapshot / restore (the fault-tolerance rollback boundary) ..
+    def _clone_cache(self, cache: dict) -> dict:
+        """Deep device copy of a cache dict — safe against the decode
+        jit's buffer donation invalidating the live arrays later."""
+        out = dict(cache)
+        out["layers"] = tuple(
+            c.clone() if hasattr(c, "clone") else jax.tree.map(jnp.copy, c)
+            for c in cache["layers"])
+        out["pos"] = jnp.copy(cache["pos"])
+        out["start"] = jnp.copy(cache["start"])
+        return out
+
+    @staticmethod
+    def _copy_parked(parked: dict) -> dict:
+        return {u: replace(rec, emitted=list(rec.emitted),
+                           pages=list(rec.pages), shared=list(rec.shared),
+                           table_row=rec.table_row.copy())
+                for u, rec in parked.items()}
+
+    def snapshot(self) -> EngineSnapshot:
+        """Capture one consistent tick boundary (see
+        :class:`EngineSnapshot`).  Call only BETWEEN ticks — a snapshot
+        taken mid-dispatch would mix pre- and post-tick state."""
+        snap = EngineSnapshot(
+            cache=self._clone_cache(self.cache),
+            dcache=self._clone_cache(self._dcache) if self._spec else None,
+            keys=jnp.copy(self._keys),
+            pos=self._pos.copy(), start=self._start.copy(),
+            temp=self._temp.copy(), next_tok=self._next_tok.copy(),
+            free=list(self._free), queue=list(self._queue),
+            active={s: (st.req, list(st.emitted))
+                    for s, st in self._active.items()},
+            results={u: list(v) for u, v in self._results.items()},
+            parked=self._copy_parked(self._parked),
+            next_uid=self._next_uid,
+            spec_stats=dict(self.spec_stats),
+            cow_copies=self._cow_copies)
+        if self.cache_kind == "paged":
+            snap.table = self._table.copy()
+            snap.slot_pages = {s: list(v)
+                               for s, v in self._slot_pages.items()}
+            snap.slot_shared = {s: list(v)
+                                for s, v in self._slot_shared.items()}
+            snap.slot_reserved = dict(self._slot_reserved)
+            snap.alloc = self._alloc.snapshot()
+            if self._prefix is not None:
+                snap.prefix = self._prefix.snapshot()
+        return snap
+
+    def restore(self, snap: EngineSnapshot) -> None:
+        """Roll the engine back to ``snap``.  Everything is re-copied on
+        the way in, so the same snapshot restores any number of times
+        (retry loops restore once per attempt).  ``check_leaks`` must
+        pass immediately after — restore unwinds partial allocations,
+        pins and table updates a failed tick left behind."""
+        self.cache = self._clone_cache(snap.cache)
+        if self._spec:
+            self._dcache = self._clone_cache(snap.dcache)
+        self._keys = jnp.copy(snap.keys)
+        self._pos = snap.pos.copy()
+        self._start = snap.start.copy()
+        self._temp = snap.temp.copy()
+        self._next_tok = snap.next_tok.copy()
+        self._free = list(snap.free)
+        self._queue = deque(snap.queue)
+        self._active = {s: _SlotState(req, list(em))
+                        for s, (req, em) in snap.active.items()}
+        self._results = {u: list(v) for u, v in snap.results.items()}
+        self._parked = self._copy_parked(snap.parked)
+        self._next_uid = snap.next_uid
+        self.spec_stats = dict(snap.spec_stats)
+        self._cow_copies = snap.cow_copies
+        if self.cache_kind == "paged":
+            self._table = snap.table.copy()
+            self._slot_pages = {s: list(v)
+                                for s, v in snap.slot_pages.items()}
+            self._slot_shared = {s: list(v)
+                                 for s, v in snap.slot_shared.items()}
+            self._slot_reserved = dict(snap.slot_reserved)
+            self._alloc.restore(snap.alloc)
+            if self._prefix is not None:
+                self._prefix.restore(snap.prefix)
+
+    # .. park / resume (the elastic-capacity boundary) ..
+    def park_slot(self, slot: int) -> int:
+        """Suspend the stream in ``slot`` mid-generation: its pages (and
+        their KV bytes) stay resident under a :class:`_Parked` record
+        while the SLOT frees for other work.  ``resume_parked`` later
+        continues the stream bit-identically.  Paged backend only — row
+        backends physically reuse the slot's KV rows for the next
+        occupant.  Returns the parked request's uid."""
+        if self.cache_kind != "paged":
+            raise ValueError(
+                "parking requires the paged backend: dense/ring slots "
+                "reuse the parked stream's KV rows for the next occupant")
+        if self._spec:
+            raise ValueError(
+                "parking speculative engines is unsupported: the "
+                "drafter's dense cache rows cannot survive slot reuse")
+        st = self._active.pop(slot)
+        uid = st.req.uid
+        self._parked[uid] = _Parked(
+            req=st.req, emitted=st.emitted, pos=int(self._pos[slot]),
+            start=int(self._start[slot]), temp=float(self._temp[slot]),
+            key=self._keys[slot], next_tok=int(self._next_tok[slot]),
+            table_row=self._table[slot].copy(),
+            pages=self._slot_pages.pop(slot, []),
+            shared=self._slot_shared.pop(slot, []),
+            reserved=self._slot_reserved.pop(slot, 0))
+        self._free.append(slot)
+        self._pos[slot] = 0
+        self._start[slot] = 0
+        self._temp[slot] = 0.0
+        self._next_tok[slot] = self.pad_id
+        self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+        self.cache["start"] = self.cache["start"].at[slot].set(0)
+        self._table[slot] = 0
+        self.cache["layers"] = self._set_tables(
+            self.cache["layers"], jnp.asarray(self._table))
+        return uid
+
+    def resume_parked(self, uid: int) -> int:
+        """Resume a parked stream into a free slot.  The block table,
+        PRNG key row, positions and pending token are restored exactly,
+        so the continued stream is bit-identical to one that was never
+        parked.  Returns the slot; raises when no slot is free."""
+        rec = self._parked[uid]
+        if not self._free:
+            raise RuntimeError(
+                f"cannot resume parked request {uid}: no free slot")
+        slot = self._free[-1]
+        self._free.remove(slot)
+        del self._parked[uid]
+        self._slot_pages[slot] = rec.pages
+        self._slot_shared[slot] = rec.shared
+        self._slot_reserved[slot] = rec.reserved
+        self._table[slot] = rec.table_row
+        self.cache["layers"] = self._set_tables(
+            self.cache["layers"], jnp.asarray(self._table))
+        self.cache["pos"] = self.cache["pos"].at[slot].set(rec.pos)
+        self.cache["start"] = self.cache["start"].at[slot].set(rec.start)
+        self._pos[slot] = rec.pos
+        self._start[slot] = rec.start
+        self._temp[slot] = rec.temp
+        self._next_tok[slot] = rec.next_tok
+        self._keys = self._keys.at[slot].set(rec.key)
+        self._active[slot] = _SlotState(rec.req, rec.emitted)
+        return slot
+
+    def drop_parked(self, uid: int) -> None:
+        """Abandon a parked stream (quarantine/cancel while parked):
+        release every page reference its record holds."""
+        rec = self._parked.pop(uid)
+        for pid in rec.pages:
+            self._alloc.release(pid)
+        for pid in rec.shared:
+            self._alloc.release(pid)
+
+    @property
+    def parked_uids(self) -> list[int]:
+        return list(self._parked)
+
     def check_leaks(self) -> None:
         """Allocator leak check (no-op for row backends): every page's
         refcount must equal its observable holder count — block-table
@@ -1059,6 +1302,12 @@ class ServeEngine:
                 occupancy[pid] = occupancy.get(pid, 0) + 1
         if self._prefix is not None:
             for pid in self._prefix.pages():
+                occupancy[pid] = occupancy.get(pid, 0) + 1
+        # parked streams hold their pages outside any block table
+        for rec in self._parked.values():
+            for pid in rec.pages:
+                occupancy[pid] = occupancy.get(pid, 0) + 1
+            for pid in rec.shared:
                 occupancy[pid] = occupancy.get(pid, 0) + 1
         self._alloc.check(occupancy)
 

@@ -17,9 +17,26 @@ dependency beyond ``asyncio``:
   JSON document instead.  A full queue answers **429** (the scheduler
   sheds, it never stalls); a malformed/oversized request answers 400.
 * ``GET /metrics`` — the scheduler's JSON metrics snapshot (TTFT /
-  inter-token p50/p99, queue depth, shed counts, page + prefix-cache +
-  spec-decode counters) plus an allocator ``leaks_clean`` probe.
-* ``GET /healthz`` — liveness.
+  inter-token p50/p99, queue depth, shed counts, fault/retry/degrade
+  counters, page + prefix-cache + spec-decode counters) plus an
+  allocator ``leaks_clean`` probe.
+* ``GET /healthz`` — READINESS, not just liveness: answers
+  ``{"ok": bool, "state": ...}`` where state is "starting" (engine
+  thread not yet spinning), "ready", "degraded" (serving, but the
+  scheduler's DegradePolicy is active — still 200: degraded capacity
+  is capacity), or "draining" (elastic drain: 503 so load balancers
+  stop routing here while in-flight streams finish).
+
+Failure semantics: a request the fault-tolerant scheduler QUARANTINES
+closes its stream with a ``(None, True)`` sentinel — the SSE stream
+emits ``data: {"error": "failed", ...}`` (with the structured record
+from ``scheduler.errors``) and a non-streaming request answers 500.
+Per-stream token queues are BOUNDED (``max_stream_queue``): a client
+too slow to drain its own completion has its request cancelled and its
+socket aborted instead of buffering the stream unboundedly.  Socket
+writes pass the ``"server.write"`` fault-injection site, so chaos
+tests can kill any write deterministically and assert the request is
+cancelled and the allocator stays leak-free.
 
 Two threads run next to the asyncio loop: the **engine thread** spins
 ``scheduler.tick()`` whenever there is work (parking on an event when
@@ -42,6 +59,7 @@ import contextlib
 import json
 import threading
 
+from repro.runtime.faults import InjectedFault, fault_point
 from repro.runtime.scheduler import PipelinedScheduler
 
 _MAX_BODY = 8 << 20
@@ -51,12 +69,18 @@ class ServingServer:
     """HTTP/SSE front end over a ``PipelinedScheduler`` (see module doc)."""
 
     def __init__(self, scheduler: PipelinedScheduler, *,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 max_stream_queue: int = 256):
+        if max_stream_queue < 1:
+            raise ValueError(
+                f"max_stream_queue must be >= 1, got {max_stream_queue}")
         self.scheduler = scheduler
         self.host, self.port = host, port
+        self.max_stream_queue = max_stream_queue
         self._loop: asyncio.AbstractEventLoop | None = None
         self._server = None
         self._stop_flag = False
+        self._started = False
         self._work = threading.Event()
         self._ready = threading.Event()
         self._loop_thread: threading.Thread | None = None
@@ -72,7 +96,16 @@ class ServingServer:
         self._engine_thread = threading.Thread(
             target=self._engine_loop, name="serve-engine", daemon=True)
         self._engine_thread.start()
+        self._started = True
         return self.host, self.port
+
+    @property
+    def state(self) -> str:
+        """Readiness state: "starting" until the engine thread spins,
+        then the scheduler's own state (ready/degraded/draining)."""
+        if not self._started:
+            return "starting"
+        return self.scheduler.state
 
     def serve_forever(self) -> None:
         """start() + block until stop() (or the loop dies)."""
@@ -120,13 +153,28 @@ class ServingServer:
         while not self._stop_flag:
             if sched.busy:
                 sched.tick()
+                if not (sched.engine._active or sched._prefill):
+                    # busy but capacity-blocked (parked streams under a
+                    # drain/shrink): nap instead of hot-spinning empty
+                    # snapshot envelopes (read is a racy heuristic only)
+                    self._work.wait(timeout=0.005)
+                    self._work.clear()
             else:
                 sched.flush()
                 self._work.wait(timeout=0.02)
                 self._work.clear()
-        # drain whatever is still in flight so cancellations/frees land
+        # drain whatever is still in flight so cancellations/frees land;
+        # a capacity-blocked scheduler (parked streams, capacity 0) makes
+        # no progress, so stop once two ticks change nothing runnable
+        prev = None
         while sched.busy:
             sched.tick()
+            cur = (len(sched.engine._active), sched._queued,
+                   self.scheduler._prefill is not None,
+                   len(sched.engine._parked), len(sched._pipeline))
+            if cur == prev and not (sched.engine._active or sched._prefill):
+                break
+            prev = cur
         sched.flush()
 
     # .. http plumbing ..
@@ -154,14 +202,18 @@ class ServingServer:
             body = await reader.readexactly(clen) if clen else b""
 
             if method == "GET" and path == "/healthz":
-                await self._respond(writer, 200, {"ok": True})
+                state = self.state
+                ok = state in ("ready", "degraded")
+                await self._respond(writer, 200 if ok else 503,
+                                    {"ok": ok, "state": state})
             elif method == "GET" and path == "/metrics":
                 await self._respond(writer, 200, self._metrics())
             elif method == "POST" and path == "/v1/completions":
                 await self._completions(reader, writer, body)
             else:
                 await self._respond(writer, 404, {"error": "not found"})
-        except (ConnectionError, asyncio.IncompleteReadError):
+        except (ConnectionError, asyncio.IncompleteReadError,
+                InjectedFault):
             pass
         finally:
             with contextlib.suppress(Exception):
@@ -171,7 +223,9 @@ class ServingServer:
     async def _respond(self, writer, status: int, doc: dict) -> None:
         reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
                   413: "Payload Too Large", 429: "Too Many Requests",
-                  500: "Internal Server Error"}.get(status, "OK")
+                  500: "Internal Server Error",
+                  503: "Service Unavailable"}.get(status, "OK")
+        fault_point("server.write")
         payload = json.dumps(doc).encode()
         writer.write(
             f"HTTP/1.1 {status} {reason}\r\n"
@@ -203,11 +257,25 @@ class ServingServer:
             return
 
         loop = asyncio.get_running_loop()
-        q: asyncio.Queue = asyncio.Queue()
+        q: asyncio.Queue = asyncio.Queue(maxsize=self.max_stream_queue)
+        uid_box: list[int] = []
 
         def on_token(tok: int, done: bool) -> None:
             # engine thread -> asyncio loop: the only crossing point
-            loop.call_soon_threadsafe(q.put_nowait, (tok, done))
+            def _put():
+                try:
+                    q.put_nowait((tok, done))
+                except asyncio.QueueFull:
+                    # slow-client policy: the socket's flow control and
+                    # our bounded queue are both full — cancel the
+                    # request and abort the connection rather than
+                    # buffer an unbounded stream for a reader that
+                    # isn't reading
+                    if uid_box:
+                        self.scheduler.cancel(uid_box[0])
+                    with contextlib.suppress(Exception):
+                        writer.transport.abort()
+            loop.call_soon_threadsafe(_put)
 
         try:
             uid = self.scheduler.submit(
@@ -222,19 +290,27 @@ class ServingServer:
             await self._respond(writer, 400, {"error": str(e)})
             return
         if uid is None:                    # admission control: shed
-            await self._respond(writer, 429, {"error": "queue full"})
+            reason = ("draining" if self.scheduler.state == "draining"
+                      else "queue full")
+            await self._respond(writer, 429, {"error": reason})
             return
+        uid_box.append(uid)
         self._work.set()
 
         if not req.get("stream", True):
-            toks = await self._collect(reader, q, uid)
-            if toks is None:
+            status, toks = await self._collect(reader, q, uid)
+            if status == "disconnect":
                 return                     # client went away: cancelled
+            if status == "failed":
+                await self._respond(writer, 500, {
+                    "error": "request failed", "uid": uid,
+                    "detail": self.scheduler.errors.get(uid)})
+                return
             await self._respond(writer, 200, {"uid": uid, "tokens": toks})
             return
         await self._stream_sse(reader, writer, q, uid)
 
-    async def _collect(self, reader, q, uid) -> list[int] | None:
+    async def _collect(self, reader, q, uid) -> tuple[str, list[int] | None]:
         eof = asyncio.ensure_future(reader.read())
         toks: list[int] = []
         try:
@@ -248,11 +324,13 @@ class ServingServer:
                 if eof in done:
                     getter.cancel()
                     self.scheduler.cancel(uid)
-                    return None
+                    return "disconnect", None
                 tok, fin = getter.result()
+                if tok is None and fin:    # quarantine failure sentinel
+                    return "failed", None
                 toks.append(tok)
                 if fin:
-                    return toks
+                    return "ok", toks
         finally:
             eof.cancel()
 
@@ -277,16 +355,27 @@ class ServingServer:
                     self.scheduler.cancel(uid)
                     return
                 tok, fin = getter.result()
+                if tok is None and fin:    # quarantine failure sentinel
+                    err = {"error": "failed", "uid": uid,
+                           "detail": self.scheduler.errors.get(uid)}
+                    fault_point("server.write", uid=uid)
+                    writer.write(f"data: {json.dumps(err)}\n\n".encode())
+                    await writer.drain()
+                    return
                 ev = {"index": len(toks), "token": tok}
                 toks.append(tok)
+                fault_point("server.write", uid=uid)
                 writer.write(f"data: {json.dumps(ev)}\n\n".encode())
                 await writer.drain()
                 if fin:
                     fin_ev = {"done": True, "uid": uid, "tokens": toks}
+                    fault_point("server.write", uid=uid)
                     writer.write(f"data: {json.dumps(fin_ev)}\n\n".encode())
                     await writer.drain()
                     return
-        except (ConnectionError, asyncio.CancelledError):
+        except (ConnectionError, asyncio.CancelledError, InjectedFault):
+            # a failed/injected write mid-stream == the client vanished:
+            # cancel through the scheduler so pages and pins come back
             self.scheduler.cancel(uid)
             raise
         finally:

@@ -1,11 +1,14 @@
 """Elastic control logic: remesh planning after host loss, straggler
-detection/backfill, and heartbeat bookkeeping — simulated populations,
-no real multi-host setup (see runtime/elastic.py module doc)."""
+detection/backfill, heartbeat bookkeeping, and the ElasticSupervisor
+wiring heartbeat state into serving capacity (drain on full loss,
+park/resume on partial loss) — simulated populations, no real
+multi-host setup (see runtime/elastic.py module doc)."""
 
 import pytest
 
-from repro.runtime.elastic import (HealthMonitor, StragglerPolicy,
-                                   plan_remesh)
+from repro.runtime.elastic import (ElasticSupervisor, HealthMonitor,
+                                   StragglerPolicy, plan_remesh)
+from repro.runtime.faults import Fault, FaultPlan
 
 
 class TestPlanRemesh:
@@ -94,6 +97,84 @@ class TestHealthMonitor:
         assert mon.alive([0], now=10.0) == [0]
 
 
+class _StubEngine:
+    def __init__(self, slots):
+        self.slots = slots
+
+
+class _StubScheduler:
+    """Records the capacity/drain calls the supervisor makes."""
+
+    def __init__(self, slots=8):
+        self.engine = _StubEngine(slots)
+        self.capacity = slots
+        self.draining = False
+        self.calls = []
+
+    def set_capacity(self, n):
+        self.capacity = n
+        self.calls.append(("capacity", n))
+
+    def drain(self):
+        self.draining = True
+        self.calls.append(("drain",))
+
+    def undrain(self):
+        self.draining = False
+        self.calls.append(("undrain",))
+
+
+class TestElasticSupervisor:
+    def _sup(self, slots=8, hosts=4, **kw):
+        sched = _StubScheduler(slots)
+        sup = ElasticSupervisor(sched, hosts=hosts, clock=lambda: 0.0,
+                                monitor=HealthMonitor(timeout_s=10.0), **kw)
+        return sched, sup
+
+    def test_partial_loss_shrinks_capacity_proportionally(self):
+        sched, sup = self._sup()
+        assert sup.poll(now=0.0) is None         # nothing changed yet
+        sup.beat(0, now=20.0)
+        sup.beat(1, now=20.0)                    # hosts 2, 3 went silent
+        ev = sup.poll(now=20.0)
+        assert ev == {"prev": (0, 1, 2, 3), "alive": (0, 1),
+                      "capacity": 4, "drained": False}
+        assert sched.capacity == 4 and not sched.draining
+        assert sup.events == [ev]
+
+    def test_full_loss_drains_and_recovery_undrains(self):
+        sched, sup = self._sup()
+        ev = sup.poll(now=100.0)                 # every heartbeat expired
+        assert ev["capacity"] == 0 and ev["drained"]
+        assert sched.draining and sched.capacity == 0
+        for h in range(4):
+            sup.beat(h, now=101.0)
+        ev = sup.poll(now=101.0)
+        assert ev["capacity"] == 8 and not ev["drained"]
+        assert not sched.draining and sched.capacity == 8
+        assert ("undrain",) in sched.calls
+
+    def test_model_axis_infeasible_maps_to_drain(self):
+        # 1 surviving host x 4 devices cannot hold a tp8 model axis:
+        # a capacity shrink would serve off a mesh that cannot exist
+        sched, sup = self._sup(model_parallel=8)
+        sup.beat(0, now=20.0)
+        ev = sup.poll(now=20.0)
+        assert ev["alive"] == (0,)
+        assert ev["capacity"] == 0 and ev["drained"]
+        assert sched.draining
+
+    def test_injected_heartbeat_fault_is_a_lost_beat(self):
+        sched, sup = self._sup()
+        with FaultPlan([Fault("heartbeat", times=99)]):
+            assert not sup.beat(2, now=20.0)     # lost: monitor not fed
+        assert sup.beat(2, now=20.0)             # plan gone: beat lands
+        sup.beat(2, now=40.0)
+        sup.beat(3, now=40.0)
+        ev = sup.poll(now=40.0)
+        assert ev["alive"] == (2, 3) and ev["capacity"] == 4
+
+
 def test_remesh_feeds_straggler_policy_end_to_end():
     """Failure -> remesh -> straggler backfill on the shrunken fleet:
     the three pieces compose without any shared mutable state."""
@@ -115,3 +196,63 @@ def test_remesh_feeds_straggler_policy_end_to_end():
     healthy = [h for h in plan.active_hosts if h != slow]
     extra = pol.reassign([slow], healthy)
     assert set(extra.values()) == {slow}
+
+
+def test_supervisor_park_resume_streams_bit_identical():
+    """End to end on the real engine: losing half the fleet parks the
+    youngest live streams mid-generation; hosts returning resumes them
+    from the exact position — final streams bit-identical to a run
+    that never lost a host."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduced_config
+    from repro.models.transformer import build_model
+    from repro.runtime.scheduler import DONE, PARKED, PipelinedScheduler
+    from repro.runtime.serve_loop import ServeEngine
+
+    cfg = reduced_config(get_config("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    reqs = [rng.integers(1, cfg.vocab_size,
+                         int(rng.integers(4, 9))).tolist() for _ in range(4)]
+    kw = dict(slots=4, max_len=64, seed=5, top_k=8)
+
+    ref_eng = ServeEngine(model, params, **kw)
+    for toks in reqs:
+        ref_eng.submit(toks, max_new_tokens=10, temperature=0.8)
+    ref = ref_eng.run()
+
+    eng = ServeEngine(model, params, **kw)
+    sched = PipelinedScheduler(eng, max_retries=1)
+    uids = [sched.submit(toks, max_new_tokens=10, temperature=0.8)
+            for toks in reqs]
+    sup = ElasticSupervisor(sched, hosts=4, clock=lambda: 0.0,
+                            monitor=HealthMonitor(timeout_s=10.0))
+    for _ in range(16):                          # admissions ramp one/tick
+        sched.tick()
+        if len(eng._active) == 4:
+            break
+    assert len(eng._active) == 4                 # all four streams live
+    sup.beat(0, now=20.0)
+    sup.beat(1, now=20.0)                        # hosts 2, 3 lost
+    ev = sup.poll(now=20.0)
+    assert ev["capacity"] == 2
+    parked = [u for u in uids if sched.status(u) == PARKED]
+    assert len(parked) == 2
+    assert sorted(eng.parked_uids) == sorted(parked)
+    for _ in range(3):
+        sched.tick()                             # survivors keep decoding
+    assert all(sched.status(u) == PARKED for u in parked)
+    for h in range(4):
+        sup.beat(h, now=21.0)                    # the fleet recovers
+    ev = sup.poll(now=21.0)
+    assert ev["capacity"] == 4 and not ev["drained"]
+    res = sched.run()
+    assert res == ref                            # parked streams resumed
+    assert all(sched.status(u) == DONE for u in uids)
+    assert not eng.parked_uids
+    eng.check_leaks()
+    assert sched.metrics.parked_total == 2
+    assert sched.metrics.resumed_total == 2

@@ -1,0 +1,357 @@
+"""Fault-tolerant serving: the deterministic fault-injection harness,
+engine snapshot/restore, scheduler retry/quarantine/watchdog/degrade
+recovery, and the chaos property — every request either completes
+bit-identical to the fault-free run or is reported failed with a
+structured error, with a clean allocator leak check after drain."""
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config, reduced_config
+from repro.models.transformer import build_model
+from repro.runtime.faults import (SITES, Fault, FaultPlan, InjectedFault,
+                                  active_plan, fault_point)
+from repro.runtime.page_allocator import PageAllocator
+from repro.runtime.scheduler import (DONE, FAILED, SHED, DegradePolicy,
+                                     PipelinedScheduler)
+from repro.runtime.serve_loop import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced_config(get_config("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n, *, prefix_len=6, seed=11, temps=(0.0, 0.9)):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size, prefix_len).tolist()
+    out = []
+    for i in range(n):
+        tail = rng.integers(1, cfg.vocab_size, int(rng.integers(2, 8)))
+        out.append((prefix + tail.tolist(), 6, temps[i % len(temps)]))
+    return out
+
+
+def _sync_reference(model, params, reqs, **engine_kw):
+    eng = ServeEngine(model, params, **engine_kw)
+    for toks, mx, temp in reqs:
+        eng.submit(toks, max_new_tokens=mx, temperature=temp)
+    return eng.run()
+
+
+def _submit_all(sched, reqs):
+    """Submit with per-request stream recorders; returns (uids, streams)."""
+    streams = []
+    uids = []
+    for toks, mx, temp in reqs:
+        seen = []
+        streams.append(seen)
+        uids.append(sched.submit(toks, max_new_tokens=mx, temperature=temp,
+                                 on_token=lambda t, d, s=seen: s.append(
+                                     (t, d))))
+    return uids, streams
+
+
+class TestFaultPlan:
+    """The harness itself: trigger windows, uid filters, hang faults,
+    nesting, and deterministic construction."""
+
+    def test_trigger_window_counts_hits(self):
+        plan = FaultPlan([Fault("sampler", at=2, times=2)])
+        with plan:
+            for expect_raise in (False, False, True, True, False):
+                if expect_raise:
+                    with pytest.raises(InjectedFault) as ei:
+                        fault_point("sampler")
+                    assert ei.value.site == "sampler"
+                else:
+                    fault_point("sampler")
+        assert plan.hits == {"sampler": 5}
+        assert [(f.site, f.hit) for f in plan.fired] == [("sampler", 2),
+                                                         ("sampler", 3)]
+
+    def test_uid_filter_fires_only_on_match(self):
+        with FaultPlan([Fault("sampler", times=99, uid=7)]) as plan:
+            fault_point("sampler", uid=3)          # wrong request: passes
+            fault_point("sampler")                 # no uid at all: passes
+            with pytest.raises(InjectedFault) as ei:
+                fault_point("sampler", uid=7)
+            assert ei.value.uid == 7
+        assert plan.hits["sampler"] == 3
+
+    def test_hang_sleeps_and_returns(self):
+        slept = []
+        plan = FaultPlan([Fault("decode.dispatch", kind="hang",
+                                seconds=2.5)], sleep=slept.append)
+        with plan:
+            fault_point("decode.dispatch")         # no raise: a late return
+        assert slept == [2.5]
+        assert plan.fired[0].kind == "hang"
+
+    def test_inactive_is_noop_and_plans_nest(self):
+        fault_point("sampler")                     # no active plan: free
+        assert active_plan() is None
+        outer = FaultPlan([Fault("sampler", times=99)])
+        inner = FaultPlan([])
+        with outer:
+            with inner:                            # innermost plan observes
+                assert active_plan() is inner
+                fault_point("sampler")
+            with pytest.raises(InjectedFault):
+                fault_point("sampler")
+        assert outer.hits == {"sampler": 1}
+        assert inner.hits == {"sampler": 1}
+
+    def test_seeded_is_deterministic_and_covers_sites(self):
+        a = FaultPlan.seeded(7)
+        b = FaultPlan.seeded(7)
+        assert a.faults == b.faults
+        assert {f.site for f in a.faults} == set(SITES)
+        assert a.name == "seeded-7"
+
+    def test_named_registry(self):
+        plan = FaultPlan.named("ci-chaos")
+        assert plan.name == "ci-chaos" and plan.faults
+        assert plan is not FaultPlan.named("ci-chaos")   # fresh counters
+        with pytest.raises(ValueError, match="unknown fault plan"):
+            FaultPlan.named("no-such-plan")
+
+    def test_fault_validation(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            Fault("not.a.site")
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            Fault("sampler", kind="explode")
+        with pytest.raises(ValueError, match="at >= 0"):
+            Fault("sampler", at=-1)
+
+
+class TestSnapshotRestore:
+    def test_allocator_snapshot_unwinds_partial_tick(self):
+        al = PageAllocator(8)
+        keep = al.alloc(3)
+        al.share(keep[0])
+        snap = al.snapshot()
+        al.alloc(2)                                # the failed tick's work
+        al.release(keep[1])
+        al.restore(snap)
+        assert al.stats() == {"total": 8, "free": 5, "shared": 1,
+                              "resident": 3}
+        al.restore(snap)                           # copies: restore twice
+        assert al.refcount(keep[0]) == 2
+
+    def test_engine_snapshot_restore_replays_bit_identically(self, tiny):
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=64, seed=5, top_k=8)
+        reqs = _requests(cfg, 4)
+
+        eng = ServeEngine(model, params, **kw)
+        for toks, mx, temp in reqs:
+            eng.submit(toks, max_new_tokens=mx, temperature=temp)
+        for _ in range(3):                         # mid-flight boundary
+            eng.step()
+        snap = eng.snapshot()
+        ref = eng.run()
+        eng.restore(snap)
+        eng.check_leaks()
+        assert eng.run() == ref
+        eng.check_leaks()
+
+
+class TestRetryBitIdentity:
+    def test_multi_site_faults_recover_bit_identically(self, tiny):
+        """Anonymous faults across allocator/prefill/decode/sampler: the
+        FT scheduler rolls back and replays; every RESULT and every
+        STREAMED token (exactly-once, through rollbacks) matches the
+        fault-free synchronous engine."""
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=64, seed=5, top_k=8)
+        reqs = _requests(cfg, 5)
+        ref = _sync_reference(model, params, reqs, **kw)
+
+        eng = ServeEngine(model, params, **kw)
+        sched = PipelinedScheduler(eng, prefill_chunk=4, max_retries=3)
+        assert sched.depth == 0                    # FT forces tick sync
+        uids, streams = _submit_all(sched, reqs)
+        plan = FaultPlan([Fault("allocator.alloc", at=2),
+                          Fault("prefill.dispatch", at=1),
+                          Fault("decode.dispatch", at=2),
+                          Fault("decode.dispatch", at=7),
+                          Fault("sampler", at=3)])
+        with plan:
+            got = sched.run()
+        assert plan.fired                          # chaos actually happened
+        assert got == ref
+        for uid, seen in zip(uids, streams):
+            toks = [t for t, _ in seen]
+            assert toks == ref[uid]                # no dup/skip on replay
+            assert [d for _, d in seen].count(True) == 1
+        eng.check_leaks()
+        snap = sched.stats()
+        assert snap["faults"]["total"] == len(plan.fired)
+        assert snap["faults"]["retries"] > 0
+        assert snap["faults"]["quarantined"] == 0
+
+
+class TestQuarantine:
+    def test_persistent_fault_quarantines_one_stream(self, tiny):
+        """A fault pinned to one uid that outlives the retry budget:
+        that request fails with a structured error and a (None, True)
+        sentinel; every other stream is bit-identical; zero leaks."""
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=64, seed=5)
+        reqs = _requests(cfg, 5)
+        ref = _sync_reference(model, params, reqs, **kw)
+
+        eng = ServeEngine(model, params, **kw)
+        sched = PipelinedScheduler(eng, prefill_chunk=4, max_retries=2)
+        uids, streams = _submit_all(sched, reqs)
+        bad = uids[1]
+        with FaultPlan([Fault("prefill.dispatch", uid=bad, times=99)]):
+            got = sched.run()
+
+        assert sched.status(bad) == FAILED
+        err = sched.errors[bad]
+        assert err["site"] == "prefill.dispatch"
+        assert err["error"] == "InjectedFault"
+        assert err["retries"] == 3                 # budget 2 + the last straw
+        assert bad not in got
+        assert streams[1][-1] == (None, True)      # failure sentinel
+        for uid, seen in zip(uids, streams):
+            if uid != bad:
+                assert sched.status(uid) == DONE
+                assert [t for t, _ in seen] == ref[uid]
+        eng.check_leaks()
+        assert sched.stats()["faults"]["quarantined"] == 1
+
+
+class TestWatchdog:
+    def test_hang_trips_watchdog_and_replays(self, tiny):
+        """A hung decode dispatch (hang fault + fake clock) exceeds the
+        watchdog budget; the completed-late tick is rolled back and
+        replayed — emission dedup makes the retry safe — and streams
+        stay bit-identical."""
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=64, seed=5)
+        reqs = _requests(cfg, 3, temps=(0.0,))
+        ref = _sync_reference(model, params, reqs, **kw)
+
+        t = [0.0]
+
+        def advance(s):
+            t[0] += s
+
+        eng = ServeEngine(model, params, **kw)
+        sched = PipelinedScheduler(eng, prefill_chunk=4, max_retries=2,
+                                   watchdog_timeout=1.0, clock=lambda: t[0])
+        uids, streams = _submit_all(sched, reqs)
+        plan = FaultPlan([Fault("decode.dispatch", at=1, kind="hang",
+                                seconds=5.0)], sleep=advance)
+        with plan:
+            got = sched.run()
+        assert got == ref
+        assert plan.fired[0].kind == "hang"
+        assert sched.metrics.watchdog_trips == 1
+        assert sched.stats()["faults"]["by_site"] == {"watchdog": 1}
+        for uid, seen in zip(uids, streams):
+            assert [tok for tok, _ in seen] == ref[uid]
+        eng.check_leaks()
+
+
+class TestDegrade:
+    def test_escalation_sheds_then_recovers(self, tiny):
+        """Repeated anonymous faults walk the degrade ladder to level 3
+        (shed the worst queued request); clean ticks then walk it back
+        down to full service."""
+        cfg, model, params = tiny
+        eng = ServeEngine(model, params, slots=1, max_len=64, seed=5)
+        sched = PipelinedScheduler(
+            eng, prefill_chunk=8, max_retries=10,
+            degrade=DegradePolicy(min_chunk=2, recover_after=2))
+        a = sched.submit([1, 2, 3, 4], max_new_tokens=8)
+        b = sched.submit([5, 6, 7, 8], max_new_tokens=4, priority=1)
+        c = sched.submit([9, 10, 11, 12], max_new_tokens=4, priority=5)
+        with FaultPlan([Fault("decode.dispatch", at=0, times=3)]) as plan:
+            res = sched.run()
+        assert len(plan.fired) == 3
+        # level 3 reached: the lowest-priority queued request was shed
+        assert sched.status(c) == SHED
+        assert sched.metrics.shed_counts.get("degraded") == 1
+        assert sched.status(a) == DONE and sched.status(b) == DONE
+        assert len(res[a]) == 8 and len(res[b]) == 4
+        # enough clean ticks ran afterwards to de-escalate fully
+        assert sched._degrade_level == 0
+        assert sched.chunk == sched._base_chunk
+        eng.check_leaks()
+
+    def test_degrade_disables_spec_and_reenables(self, tiny):
+        """Level 1 turns speculative decoding off (match-mode keeps the
+        stream bit-identical to the spec engine); recovery turns it back
+        on."""
+        cfg, model, params = tiny
+        kw = dict(slots=2, max_len=64, seed=5, draft_model=model,
+                  draft_params=params, spec_k=2, spec_mode="match")
+        reqs = _requests(cfg, 3, temps=(0.0,))
+        ref = _sync_reference(model, params, reqs, **kw)
+
+        eng = ServeEngine(model, params, **kw)
+        sched = PipelinedScheduler(
+            eng, max_retries=4, degrade=DegradePolicy(recover_after=2))
+        for toks, mx, temp in reqs:
+            sched.submit(toks, max_new_tokens=mx, temperature=temp)
+        with FaultPlan([Fault("spec.verify", at=1)]) as plan:
+            got = sched.run()
+        assert plan.fired
+        assert got == ref
+        assert eng.spec_enabled                    # recovered to level 0
+        eng.check_leaks()
+
+
+def _chaos_invariant(tiny, seed):
+    """Under a seeded fault schedule every request either finishes
+    bit-identical to the fault-free reference or is FAILED with a
+    structured error — and the engine drains leak-free."""
+    cfg, model, params = tiny
+    kw = dict(slots=2, max_len=64, seed=5, top_k=8)
+    reqs = _requests(cfg, 5)
+    ref = _sync_reference(model, params, reqs, **kw)
+
+    eng = ServeEngine(model, params, **kw)
+    sched = PipelinedScheduler(eng, prefill_chunk=4, max_retries=2)
+    uids, streams = _submit_all(sched, reqs)
+    plan = FaultPlan.seeded(
+        seed, sites=("allocator.alloc", "prefill.dispatch",
+                     "decode.dispatch", "sampler"),
+        faults_per_site=2, max_at=10)
+    with plan:
+        got = sched.run()
+    for uid, seen in zip(uids, streams):
+        status = sched.status(uid)
+        if status == DONE:
+            assert got[uid] == ref[uid]
+            assert [t for t, _ in seen] == ref[uid]
+        else:
+            assert status == FAILED
+            err = sched.errors[uid]
+            assert err["uid"] == uid and err["site"] in SITES
+            assert seen[-1] == (None, True)
+            assert uid not in got
+    assert any(sched.status(u) == DONE for u in uids)
+    eng.check_leaks()
+    snap = sched.stats()
+    assert snap["faults"]["total"] == len(plan.fired)
+
+
+class TestChaosProperty:
+    @pytest.mark.parametrize("seed", [0, 3, 11])
+    def test_fixed_seeds(self, tiny, seed):
+        _chaos_invariant(tiny, seed)
+
+    @given(seed=st.integers(min_value=0, max_value=2**16))
+    @settings(max_examples=5, deadline=None)
+    def test_random_seeds(self, tiny, seed):
+        _chaos_invariant(tiny, seed)

@@ -1,6 +1,8 @@
 """HTTP/SSE front end: streaming completions, /metrics, error paths,
 mid-stream client disconnect -> scheduler cancellation with a clean
-allocator leak check, and clean shutdown."""
+allocator leak check, readiness states, injected socket-write faults,
+failed-request reporting, slow-client backpressure, and clean
+shutdown."""
 
 import http.client
 import json
@@ -12,16 +14,23 @@ import pytest
 
 from repro.configs import get_config, reduced_config
 from repro.models.transformer import build_model
+from repro.runtime.faults import Fault, FaultPlan
 from repro.runtime.scheduler import PipelinedScheduler
 from repro.runtime.serve_loop import ServeEngine
 from repro.runtime.server import ServingServer
 
 
 @pytest.fixture(scope="module")
-def served():
+def tiny_model():
     cfg = reduced_config(get_config("qwen2.5-3b"))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def served(tiny_model):
+    cfg, model, params = tiny_model
     eng = ServeEngine(model, params, slots=2, max_len=512, seed=7)
     sched = PipelinedScheduler(eng, pipeline_depth=1, prefill_chunk=8)
     srv = ServingServer(sched)
@@ -59,7 +68,7 @@ def _prompt(cfg, n, seed=0):
 
 def test_healthz(served):
     status, body = _get_json(served, "/healthz")
-    assert (status, body) == (200, {"ok": True})
+    assert (status, body) == (200, {"ok": True, "state": "ready"})
 
 
 def test_unknown_route_404(served):
@@ -127,8 +136,8 @@ def test_disconnect_cancels_and_frees(served):
     r.read(40)                   # a couple of events, then walk away
     r.close()                    # closes the socket fd (FIN/RST)
     c.close()
-    deadline = time.time() + 60
-    while time.time() < deadline:
+    deadline = time.monotonic() + 60
+    while time.monotonic() < deadline:
         _, m = _get_json(served, "/metrics")
         if (m["requests"]["cancelled"] > before
                 and m["queue"]["active_slots"] == 0):
@@ -162,3 +171,146 @@ def test_serving_continues_after_errors(served):
     assert r.status == 200
     assert len(json.loads(r.read())["tokens"]) == 3
     c.close()
+
+
+def test_state_starting_until_started(tiny_model):
+    cfg, model, params = tiny_model
+    eng = ServeEngine(model, params, slots=2, max_len=64, seed=7)
+    sched = PipelinedScheduler(eng)
+    srv = ServingServer(sched)
+    assert srv.state == "starting"       # constructed but not serving
+    host, port = srv.start()
+    try:
+        c = http.client.HTTPConnection(host, port, timeout=60)
+        c.request("GET", "/healthz")
+        r = c.getresponse()
+        assert r.status == 200 and json.loads(r.read())["state"] == "ready"
+        c.close()
+    finally:
+        srv.stop()
+    eng.check_leaks()
+
+
+def test_healthz_draining_503_and_429(served):
+    """A draining server flips readiness (load balancers stop routing)
+    and answers new submissions 429 until undrained."""
+    cfg, eng, sched, *_ = served
+    sched.drain()
+    try:
+        status, body = _get_json(served, "/healthz")
+        assert (status, body) == (503, {"ok": False, "state": "draining"})
+        c, r = _post(served, {"tokens": _prompt(cfg, 6, seed=4),
+                              "max_new_tokens": 2})
+        assert r.status == 429
+        assert json.loads(r.read())["error"] == "draining"
+        c.close()
+    finally:
+        sched.undrain()
+    status, body = _get_json(served, "/healthz")
+    assert (status, body) == (200, {"ok": True, "state": "ready"})
+
+
+def test_injected_write_fault_cancels_stream(served):
+    """An injected socket-write fault mid-SSE behaves exactly like a
+    vanished client: the request is cancelled through the scheduler and
+    the leak probe stays clean."""
+    cfg, eng, sched, *_ = served
+    before = sched.metrics.cancelled_total
+    with FaultPlan([Fault("server.write", at=3)]):
+        c, r = _post(served, {"tokens": _prompt(cfg, 8, seed=5),
+                              "max_new_tokens": 480})
+        assert r.status == 200
+        try:
+            r.read()                     # server kills the stream mid-way
+        except (http.client.HTTPException, ConnectionError, OSError):
+            pass
+        c.close()
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            _, m = _get_json(served, "/metrics")
+            if (m["requests"]["cancelled"] > before
+                    and m["queue"]["active_slots"] == 0):
+                break
+            time.sleep(0.2)
+    assert m["requests"]["cancelled"] == before + 1
+    assert m["leaks_clean"] is True
+
+
+def test_quarantined_request_reports_structured_error(tiny_model):
+    """A request that exhausts its retry budget answers 500 (non-stream)
+    with the scheduler's structured error attached, and the server keeps
+    serving fresh requests afterwards."""
+    cfg, model, params = tiny_model
+    eng = ServeEngine(model, params, slots=2, max_len=64, seed=7)
+    sched = PipelinedScheduler(eng, prefill_chunk=8, max_retries=1)
+    srv = ServingServer(sched)
+    host, port = srv.start()
+    try:
+        # the first request on a fresh engine is uid 0: pin the fault
+        with FaultPlan([Fault("prefill.dispatch", uid=0, times=99)]):
+            c = http.client.HTTPConnection(host, port, timeout=600)
+            c.request("POST", "/v1/completions",
+                      json.dumps({"tokens": _prompt(cfg, 8, seed=6),
+                                  "max_new_tokens": 4, "stream": False}),
+                      {"Content-Type": "application/json"})
+            r = c.getresponse()
+            assert r.status == 500
+            body = json.loads(r.read())
+            c.close()
+            assert body["error"] == "request failed"
+            assert body["detail"]["site"] == "prefill.dispatch"
+            assert body["detail"]["error"] == "InjectedFault"
+            # uid 0 is quarantined; the next stream is untouched
+            c = http.client.HTTPConnection(host, port, timeout=600)
+            c.request("POST", "/v1/completions",
+                      json.dumps({"tokens": _prompt(cfg, 6, seed=7),
+                                  "max_new_tokens": 3, "stream": False}),
+                      {"Content-Type": "application/json"})
+            r = c.getresponse()
+            assert r.status == 200
+            assert len(json.loads(r.read())["tokens"]) == 3
+            c.close()
+    finally:
+        srv.stop()
+    eng.check_leaks()
+    assert sched.errors[0]["uid"] == 0
+
+
+def test_slow_client_bounded_queue_disconnects(tiny_model):
+    """A client that stops draining its stream: a hung socket write
+    backs tokens up into the bounded per-stream queue; overflow is
+    treated as a dead client — cancel + abort, no unbounded buffering,
+    no leak."""
+    cfg, model, params = tiny_model
+    eng = ServeEngine(model, params, slots=2, max_len=512, seed=7)
+    sched = PipelinedScheduler(eng, prefill_chunk=8)
+    srv = ServingServer(sched, max_stream_queue=1)
+    host, port = srv.start()
+    # EVERY write hangs: the writer drains ~5 events/s while the engine
+    # produces hundreds — the bounded queue must overflow long before
+    # the 480-token request finishes, however fast or slow the machine
+    plan = FaultPlan([Fault("server.write", times=9999, kind="hang",
+                            seconds=0.2)])
+    try:
+        with plan:
+            c = http.client.HTTPConnection(host, port, timeout=600)
+            c.request("POST", "/v1/completions",
+                      json.dumps({"tokens": _prompt(cfg, 8, seed=8),
+                                  "max_new_tokens": 400}),
+                      {"Content-Type": "application/json"})
+            r = c.getresponse()
+            assert r.status == 200
+            deadline = time.monotonic() + 60
+            while (sched.metrics.cancelled_total < 1
+                   and time.monotonic() < deadline):
+                time.sleep(0.2)
+            try:
+                r.read()
+            except (http.client.HTTPException, ConnectionError, OSError):
+                pass
+            c.close()
+    finally:
+        srv.stop()
+    assert sched.metrics.cancelled_total == 1
+    assert plan.fired and plan.fired[0].kind == "hang"
+    eng.check_leaks()
